@@ -1,0 +1,115 @@
+"""Roofline report generator: merges the dry-run sweep JSON with
+registry-derived MODEL_FLOPS into the EXPERIMENTS.md tables.
+
+Terms per (arch × shape × mesh), all per-chip:
+  compute_s    = HLO_FLOPs / 197e12       (bf16 peak, v5e)
+  memory_s     = HLO_bytes / 819e9        (HBM BW)
+  collective_s = collective_bytes / 50e9  (ICI link BW)
+MODEL_FLOPS = 6·N_active·D + 3·attn (train), 2·N_active·D + attn
+(prefill/decode); roofline_fraction = ideal_compute_time / bound.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_results(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def refresh_model_flops(results: dict) -> None:
+    """Recompute MODEL_FLOPS from the (possibly newer) registry."""
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.configs.registry import get_cell
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    cache: dict = {}
+    for key, rec in results.items():
+        if rec.get("status") != "ok":
+            continue
+        ck = (rec["arch"], rec["shape"])
+        if ck not in cache:
+            cell = get_cell(rec["arch"], rec["shape"], mesh, False)
+            cache[ck] = cell.flops_model
+        rec["model_flops"] = cache[ck]
+        h = rec.get("hlo")
+        if not h:
+            continue
+        chips = rec["chips"]
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ideal = rec["model_flops"] / (chips * PEAK_FLOPS)
+        r["roofline_fraction"] = ideal / bound if bound else 0.0
+        total = h["flops"] * chips
+        r["useful_flops_ratio"] = rec["model_flops"] / total if total else 0.0
+
+
+def table(results: dict, multi_pod: bool | None = False) -> str:
+    hdr = ("| cell | chips | mem/dev GiB | fits | compute_s | memory_s | "
+           "collective_s | bottleneck | useful | roofline |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for key, r in sorted(results.items()):
+        if r.get("status") == "skipped":
+            if (multi_pod is None) or (r["multi_pod"] == multi_pod):
+                reason = r.get("skip_reason", "")[:48]
+                rows.append(f"| {r['arch']}×{r['shape']} | — | — | — | — | — "
+                            f"| — | skipped: {reason} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        if multi_pod is not None and r["multi_pod"] != multi_pod:
+            continue
+        m = r.get("memory", {}).get("live_bytes_per_device", 0) / 2 ** 30
+        rl = r.get("roofline", {})
+        rows.append(
+            f"| {r['arch']}×{r['shape']} | {r['chips']} | {m:.2f} | "
+            f"{'✓' if r.get('fits_16gb') else '✗'} | "
+            f"{rl.get('compute_s', 0):.2e} | {rl.get('memory_s', 0):.2e} | "
+            f"{rl.get('collective_s', 0):.2e} | "
+            f"{rl.get('bottleneck', '-').replace('_s', '')} | "
+            f"{rl.get('useful_flops_ratio', 0):.3f} | "
+            f"{rl.get('roofline_fraction', 0):.4f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def summary(results: dict) -> dict:
+    ok = [r for r in results.values() if r.get("status") == "ok"]
+    sk = [r for r in results.values() if r.get("status") == "skipped"]
+    er = [r for r in results.values() if r.get("status") == "error"]
+    fits = [r for r in ok if r.get("fits_16gb")]
+    return {"ok": len(ok), "skipped": len(sk), "errors": len(er),
+            "fits_16gb": len(fits),
+            "over_budget": [k for k, r in results.items()
+                            if r.get("status") == "ok"
+                            and not r.get("fits_16gb")]}
+
+
+def run(path: str = "dryrun_results.json", quick: bool = False):
+    if not os.path.exists(path):
+        return [("roofline/report", 0.0, {"error": f"{path} missing — run "
+                 "PYTHONPATH=src python -m repro.launch.dryrun first"})]
+    results = load_results(path)
+    refresh_model_flops(results)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    s = summary(results)
+    rows = [("roofline/summary", 0.0, s)]
+    for key, r in results.items():
+        if r.get("status") != "ok":
+            continue
+        rl = r.get("roofline", {})
+        rows.append((f"roofline/{key}", 0.0,
+                     {"bottleneck": rl.get("bottleneck"),
+                      "fraction": round(rl.get("roofline_fraction", 0), 4),
+                      "mem_gib": round(r.get("memory", {}).get(
+                          "live_bytes_per_device", 0) / 2 ** 30, 2)}))
+    return rows

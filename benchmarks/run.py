@@ -1,0 +1,61 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV (the stub contract), plus the dry-run roofline report when available.
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from . import paper_figs, roofline_report
+
+    benches = [
+        paper_figs.fig6_vs_copylog,
+        paper_figs.fig7_vs_interval_tree,
+        paper_figs.fig8a_graphpool_memory,
+        paper_figs.fig8b_partitioned,
+        paper_figs.fig8c_multipoint,
+        paper_figs.fig8d_columnar,
+        paper_figs.fig9_construction_params,
+        paper_figs.fig10_materialization,
+        paper_figs.fig11_diff_functions,
+        paper_figs.bitmap_penalty,
+        paper_figs.subgraph_pattern_index,
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench(quick=args.quick):
+                print(f"{name},{us:.1f},\"{json.dumps(derived)}\"",
+                      flush=True)
+        except Exception:
+            failures += 1
+            print(f"{bench.__name__},ERROR,\"{traceback.format_exc(limit=2)}\"",
+                  file=sys.stderr, flush=True)
+    if args.only is None or "roofline" in (args.only or ""):
+        try:
+            for name, us, derived in roofline_report.run(args.dryrun_json):
+                print(f"{name},{us:.1f},\"{json.dumps(derived)}\"", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

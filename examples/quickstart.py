@@ -1,0 +1,56 @@
+"""Quickstart: build a historical graph, index it, query snapshots.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import GraphManager, TimeExpression
+from repro.core.events import GraphHistoryBuilder
+
+# -- 1. record an evolving collaboration network --------------------------
+b = GraphHistoryBuilder()
+for person in ("ada", "grace", "edsger", "barbara", "donald"):
+    b.add_node(person, t=1960, attrs={"papers": 0.0})
+b.add_edge("ada", "grace", t=1962)
+b.add_edge("grace", "edsger", t=1965)
+b.set_node_attr("grace", "papers", 12.0, t=1966)
+b.add_edge("barbara", "donald", t=1968)
+b.delete_edge("ada", "grace", t=1970)
+b.add_edge("ada", "donald", t=1972)
+b.transient_edge("edsger", "donald", t=1971)   # a one-off "message"
+universe, events = b.finalize()
+
+# -- 2. build the DeltaGraph index + GraphPool -----------------------------
+gm = GraphManager(universe, events, L=4, k=2, diff_fn="balanced")
+
+# -- 3. singlepoint retrieval (the paper's GetHistGraph) -------------------
+h1966 = gm.get_hist_graph(1966, "+node:papers")
+print("1966 nodes:", sorted(h1966.get_nodes()))
+print("1966 grace neighbors:", h1966.get_neighbors("grace"))
+print("1966 grace.papers =", h1966.node_attr("grace", "papers"))
+
+# -- 4. multipoint retrieval (one Steiner-tree plan) -----------------------
+for h in gm.get_hist_graphs([1963, 1969, 1973]):
+    print(f"{h.time}: {h.num_nodes()} nodes / {h.num_edges()} edges")
+
+# -- 5. TimeExpression: edges valid in 1969 but not 1973 -------------------
+tex = TimeExpression.parse("t0 & ~t1", [1969, 1973])
+st = gm.get_hist_graph_expr(tex)
+print("edges in 1969 but gone by 1973:", int(st.edge_mask.sum()))
+
+# -- 6. interval query picks up the transient ------------------------------
+res = gm.get_hist_graph_interval(1970, 1973)
+print("elements added in [1970, 1973):",
+      {k: v.tolist() for k, v in res.items() if len(v)})
+
+# -- 7. live updates keep the index fresh (§6) -----------------------------
+upd = GraphHistoryBuilder()
+upd.universe = universe          # same id space, new events
+upd._seq = 10_000
+upd.add_node("alan", 1975)
+upd.add_edge("alan", "donald", 1976)
+_, new_events = upd.finalize()
+gm.update(new_events)
+h1976 = gm.get_hist_graph(1976)
+print("1976 after live update:", h1976.num_nodes(), "nodes,",
+      h1976.num_edges(), "edges")

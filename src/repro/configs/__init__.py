@@ -1,0 +1,2 @@
+from .registry import (ARCH_IDS, get_arch, get_cell, list_cells,  # noqa: F401
+                       reduced_config)

@@ -1,0 +1,15 @@
+"""Core of the paper's contribution: DeltaGraph + GraphPool.
+
+Public surface:
+
+* :class:`~repro.core.events.GraphHistoryBuilder` — ingest activity
+* :class:`~repro.core.deltagraph.DeltaGraph` — the hierarchical index
+* :class:`~repro.core.graphpool.GraphPool` — overlaid in-memory snapshots
+* :class:`~repro.core.manager.GraphManager` — the paper's API façade
+"""
+from .deltagraph import DeltaGraph  # noqa: F401
+from .events import (EventList, GraphHistoryBuilder, GraphUniverse,  # noqa: F401
+                     MaterializedState, apply_events, replay)
+from .graphpool import GraphPool  # noqa: F401
+from .manager import GraphManager, HistGraph  # noqa: F401
+from .query import AttrOptions, TimeExpression, parse_attr_options  # noqa: F401

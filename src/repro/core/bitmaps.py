@@ -1,0 +1,109 @@
+"""Packed-bitmap primitives (the paper's per-element ``BM`` strings, §6).
+
+Membership sets over a dense slot universe are stored as packed ``uint32``
+words, little-endian bit order: element ``i`` lives at bit ``i & 31`` of word
+``i >> 5``.  Construction-time code paths use the numpy variants; the
+query-time execution engine uses the jnp variants (jit-compatible) and, for
+the hot fused path, the Pallas kernel in ``repro.kernels.delta_apply``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def num_words(universe_size: int) -> int:
+    return (int(universe_size) + WORD_BITS - 1) // WORD_BITS
+
+
+# ---------------------------------------------------------------------------
+# numpy variants (construction / host-side)
+# ---------------------------------------------------------------------------
+
+def np_pack(mask: np.ndarray) -> np.ndarray:
+    """bool[U] -> uint32[W]."""
+    mask = np.asarray(mask, dtype=bool)
+    u8 = np.packbits(mask, bitorder="little")
+    pad = (-u8.size) % 4
+    if pad:
+        u8 = np.concatenate([u8, np.zeros(pad, np.uint8)])
+    return u8.view(np.uint32)
+
+
+def np_unpack(words: np.ndarray, universe_size: int) -> np.ndarray:
+    """uint32[W] -> bool[U]."""
+    u8 = np.asarray(words, dtype=np.uint32).view(np.uint8)
+    bits = np.unpackbits(u8, bitorder="little")
+    return bits[:universe_size].astype(bool)
+
+
+def np_from_indices(idx: np.ndarray, universe_size: int) -> np.ndarray:
+    """Sorted-or-not unique indices -> packed uint32[W]."""
+    words = np.zeros(num_words(universe_size), np.uint32)
+    idx = np.asarray(idx, dtype=np.int64)
+    if idx.size:
+        np.bitwise_or.at(words, idx >> 5, (np.uint32(1) << (idx & 31).astype(np.uint32)))
+    return words
+
+
+def np_to_indices(words: np.ndarray, universe_size: int) -> np.ndarray:
+    return np.nonzero(np_unpack(words, universe_size))[0].astype(np.int32)
+
+
+def np_popcount(words: np.ndarray) -> int:
+    return int(np.bitwise_count(np.asarray(words, np.uint32)).sum())
+
+
+# ---------------------------------------------------------------------------
+# jnp variants (query-time / jit)
+# ---------------------------------------------------------------------------
+
+def from_indices(idx: jnp.ndarray, universe_size: int) -> jnp.ndarray:
+    """Unique element indices -> packed bitmap.  Valid because every
+    (word, bit) pair is distinct, so scatter-add == scatter-or.  Negative
+    indices (used as padding) are dropped."""
+    W = num_words(universe_size)
+    idx = idx.astype(jnp.int32)
+    valid = idx >= 0
+    word = jnp.where(valid, idx >> 5, 0)
+    bit = jnp.where(valid, (jnp.uint32(1) << (idx & 31).astype(jnp.uint32)), jnp.uint32(0))
+    return jnp.zeros(W, jnp.uint32).at[word].add(bit)
+
+
+def unpack(words: jnp.ndarray, universe_size: int) -> jnp.ndarray:
+    W = words.shape[0]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(W * 32)[:universe_size].astype(bool)
+
+
+def pack(mask: jnp.ndarray) -> jnp.ndarray:
+    U = mask.shape[0]
+    W = num_words(U)
+    padded = jnp.zeros(W * 32, jnp.uint32).at[:U].set(mask.astype(jnp.uint32))
+    lanes = padded.reshape(W, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (lanes << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(words).sum(dtype=jnp.int64)
+
+
+def apply_delta(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray) -> jnp.ndarray:
+    """One delta step: (base & ~dels) | adds, all packed uint32[W]."""
+    return (base & ~dels) | adds
+
+
+def apply_delta_chain(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray) -> jnp.ndarray:
+    """Sequentially apply K deltas stacked as [K, W] (pure-jnp reference for
+    the fused Pallas kernel)."""
+    def step(m, ad):
+        a, d = ad
+        return (m & ~d) | a, None
+    out, _ = jax.lax.scan(step, base, (adds, dels))
+    return out

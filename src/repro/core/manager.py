@@ -1,0 +1,196 @@
+"""GraphManager / HistoryManager / QueryManager composition (paper §3.2.2)
+and the programmatic HistGraph API (§3.2.1).
+
+* **HistoryManager** role — DeltaGraph construction, query planning, delta
+  and eventlist reads → lives in :class:`repro.core.deltagraph.DeltaGraph`.
+* **GraphManager** role — GraphPool maintenance, overlaying, bit
+  assignment, post-query clean-up → here.
+* **QueryManager** role — external-id ↔ slot translation → the universe's
+  lookup tables, surfaced through :class:`HistGraph` accessors.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from ..graph.csr import CSR, build_csr
+from ..storage.kv import KVStore, MemKV
+from .deltagraph import DeltaGraph
+from .events import EventList, GraphUniverse, MaterializedState, replay
+from .graphpool import CURRENT_GID, GraphPool
+from .query import NO_ATTRS, AttrOptions, TimeExpression, parse_attr_options
+
+
+class HistGraph:
+    """A retrieved historical snapshot, overlaid in the GraphPool."""
+
+    def __init__(self, mgr: "GraphManager", gid: int, t: int | None,
+                 options: AttrOptions) -> None:
+        self._mgr = mgr
+        self.gid = gid
+        self.time = t
+        self.options = options
+        self._csr: CSR | None = None
+
+    # -- structure ------------------------------------------------------
+    @property
+    def node_mask(self) -> np.ndarray:
+        return self._mgr.pool.get_node_mask(self.gid)
+
+    @property
+    def edge_mask(self) -> np.ndarray:
+        return self._mgr.pool.get_edge_mask(self.gid)
+
+    def num_nodes(self) -> int:
+        return int(self.node_mask.sum())
+
+    def num_edges(self) -> int:
+        return int(self.edge_mask.sum())
+
+    def get_nodes(self) -> list[Any]:
+        u = self._mgr.universe
+        return [u.node_ids[s] for s in np.nonzero(self.node_mask)[0]]
+
+    def csr(self) -> CSR:
+        if self._csr is None:
+            u = self._mgr.universe
+            self._csr = build_csr(u.edge_src, u.edge_dst, u.num_nodes,
+                                  self.edge_mask, u.edge_directed)
+        return self._csr
+
+    def get_neighbors(self, node_id: Any) -> list[Any]:
+        u = self._mgr.universe
+        s = u.node_slot(node_id)
+        return [u.node_ids[v] for v in self.csr().neighbors(s)]
+
+    def get_edge_obj(self, u_id: Any, v_id: Any) -> int | None:
+        u = self._mgr.universe
+        su, sv = u.node_slot(u_id), u.node_slot(v_id)
+        c = self.csr()
+        for v, e in zip(c.neighbors(su), c.edge_slots(su)):
+            if v == sv:
+                return int(e)
+        return None
+
+    # -- attributes ------------------------------------------------------
+    def node_attr(self, node_id: Any, name: str) -> float:
+        u = self._mgr.universe
+        col = u.attr_col("node", name)
+        entry = self._mgr.pool.table[self.gid]
+        vec = entry.node_attr_cols.get(col)
+        if vec is None:
+            raise KeyError(f"attribute {name!r} was not fetched "
+                           f"(options {self.options})")
+        return float(vec[u.node_slot(node_id)])
+
+    def edge_attr_by_slot(self, edge_slot: int, name: str) -> float:
+        u = self._mgr.universe
+        col = u.attr_col("edge", name)
+        vec = self._mgr.pool.table[self.gid].edge_attr_cols.get(col)
+        if vec is None:
+            raise KeyError(f"attribute {name!r} was not fetched")
+        return float(vec[edge_slot])
+
+    def to_state(self, with_attrs: bool = True) -> MaterializedState:
+        return self._mgr.pool.get_state(self.gid, with_attrs=with_attrs)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        self._mgr.pool.release(self.gid)
+        self._mgr.pool.cleaner()
+
+
+class GraphManager:
+    """Top-level façade: owns the DeltaGraph index, the GraphPool, and the
+    current graph; exposes the paper's retrieval calls."""
+
+    def __init__(self, universe: GraphUniverse, events: EventList, *,
+                 store: KVStore | None = None, L: int = 1000, k: int = 2,
+                 diff_fn: str | Sequence[str] = "balanced",
+                 diff_params: dict | Sequence[dict] | None = None,
+                 num_partitions: int = 1,
+                 partition_fn: str = "word_cyclic") -> None:
+        self.universe = universe
+        self.store = store if store is not None else MemKV()
+        self.dg = DeltaGraph(universe, self.store, L=L, k=k, diff_fn=diff_fn,
+                             diff_params=diff_params,
+                             num_partitions=num_partitions,
+                             partition_fn=partition_fn).build(events)
+        self.pool = GraphPool(universe)
+        self.pool.set_current(replay(universe, events,
+                                     int(events.time[-1]) if len(events) else 0))
+
+    # ------------------------------------------------------------- retrieval
+    def get_hist_graph(self, t: int, attr_options: str = "",
+                       use_current: bool = True) -> HistGraph:
+        opts = parse_attr_options(attr_options, self.universe)
+        st = self.dg.get_snapshot(t, opts, pool=self.pool,
+                                  use_current=use_current)
+        gid = self.pool.insert_snapshot(st)
+        return HistGraph(self, gid, t, opts)
+
+    def get_hist_graphs(self, times: Sequence[int],
+                        attr_options: str = "") -> list[HistGraph]:
+        opts = parse_attr_options(attr_options, self.universe)
+        states = self.dg.get_snapshots(list(times), opts, pool=self.pool)
+        out = []
+        for t in times:
+            gid = self.pool.insert_snapshot(states[t])
+            out.append(HistGraph(self, gid, t, opts))
+        return out
+
+    def get_hist_graph_expr(self, tex: TimeExpression,
+                            attr_options: str = "") -> MaterializedState:
+        """Hypothetical graph for a Boolean TimeExpression (§3.2.1): the
+        element set satisfying the expression; attributes come from the
+        latest queried time point at which the element exists."""
+        opts = parse_attr_options(attr_options, self.universe)
+        states = self.dg.get_snapshots(list(tex.times), opts, pool=self.pool)
+        ordered = [states[t] for t in tex.times]
+        nmask = tex.evaluate([s.node_mask for s in ordered])
+        emask = tex.evaluate([s.edge_mask for s in ordered])
+        na = np.full_like(ordered[0].node_attrs, np.nan)
+        ea = np.full_like(ordered[0].edge_attrs, np.nan)
+        for s in ordered:  # later time points override
+            take = s.node_mask & nmask
+            na[take] = s.node_attrs[take]
+            take_e = s.edge_mask & emask
+            ea[take_e] = s.edge_attrs[take_e]
+        return MaterializedState(nmask, emask, na, ea)
+
+    def get_hist_graph_interval(self, ts: int, te: int) -> dict[str, np.ndarray]:
+        return self.dg.get_interval(ts, te)
+
+    # ------------------------------------------------------------- updates
+    def update(self, ev: EventList) -> None:
+        """Live update path (§6): current graph + index maintenance."""
+        self.pool.update_current(ev)
+        before = len(self.dg.leaf_nids)
+        self.dg.append_events(ev)
+        if len(self.dg.leaf_nids) != before:
+            self.pool.mark_flushed()
+
+    # -------------------------------------------------------- materialization
+    def materialize_roots(self, depth: int = 1) -> list[int]:
+        """Materialize the top `depth` interior levels (§4.5)."""
+        out = []
+        frontier = self.dg.root_nids()
+        for _ in range(depth):
+            nxt = []
+            for nid in frontier:
+                if self.dg.nodes[nid].materialized_as is None:
+                    out.append(self.dg.materialize(nid, self.pool))
+                for eid in self.dg.adj[nid]:
+                    e = self.dg.edges[eid]
+                    if e.src == nid and e.kind == "delta":
+                        nxt.append(e.dst)
+            frontier = nxt
+        return out
+
+    def total_materialization(self) -> list[int]:
+        """Materialize every leaf — DeltaGraph degenerates to Copy+Log with
+        overlaid in-memory copies (§4.5)."""
+        return [self.dg.materialize(nid, self.pool)
+                for nid in self.dg.leaf_nids
+                if self.dg.nodes[nid].materialized_as is None]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel directory has: the pallas_call + BlockSpec implementation,
+``ops.py`` (jit'd wrapper with impl switch), ``ref.py`` (pure-jnp oracle).
+On this CPU container kernels run with ``interpret=True``; ``impl='xla'``
+variants are what the dry-run lowers (keeps FLOPs visible to
+cost_analysis for the roofline).
+"""
+from .delta_apply import delta_apply_chain  # noqa: F401
+from .flash_attention import attention  # noqa: F401
+from .segment_sum import bucket_edges, segment_sum  # noqa: F401

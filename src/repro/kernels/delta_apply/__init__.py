@@ -1,0 +1,1 @@
+from .ops import delta_apply_chain, delta_apply_chain_ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for fused delta-chain application.
+
+On CPU containers the Pallas TPU kernel runs in ``interpret=True`` mode
+(used by tests); production TPU deployments pass ``interpret=False``.
+``impl='xla'`` selects the pure-jnp scan (used under `jit` in the
+snapshot-retrieval engine, and as the oracle).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .delta_apply import delta_apply_chain_pallas
+from .ref import delta_apply_chain_ref
+
+
+def delta_apply_chain(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray,
+                      *, impl: str = "xla", block_w: int = 1024,
+                      interpret: bool = True) -> jnp.ndarray:
+    if impl == "xla":
+        return delta_apply_chain_ref(base, adds, dels)
+    if impl == "pallas":
+        return delta_apply_chain_pallas(base, adds, dels, block_w=block_w,
+                                        interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused K-delta bitmap application.
+
+Semantics (DeltaGraph path application, §4.3): starting from the packed
+base membership bitmap, apply K (add, del) bitmap pairs in order::
+
+    m_0 = base
+    m_i = (m_{i-1} & ~del_i) | add_i
+    out = m_K
+
+All arrays are packed ``uint32`` words; ``adds``/``dels`` are stacked
+``[K, W]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_apply_chain_ref(base: jnp.ndarray, adds: jnp.ndarray,
+                          dels: jnp.ndarray) -> jnp.ndarray:
+    def step(m, ad):
+        a, d = ad
+        return (m & ~d) | a, None
+
+    out, _ = jax.lax.scan(step, base, (adds, dels))
+    return out

@@ -1,0 +1,180 @@
+"""Attention front-end used by every LM architecture.
+
+Three implementations behind one signature:
+
+* ``impl='xla'``     — *chunked* online-softmax in pure JAX with a
+  FlashAttention-2-style ``custom_vjp``: forward saves only
+  ``(q, k, v, out, rowmax, denom)`` and the backward recomputes each KV
+  chunk's scores — no per-chunk residual stacking, so peak memory is
+  O(chunk) not O(sequence).  Lowers cleanly for the multi-pod dry-run and
+  its FLOPs are visible to ``cost_analysis`` (the roofline path).
+* ``impl='pallas'``  — the TPU kernel (``flash_attention.py``); validated
+  in interpret mode on CPU, compiled on real TPUs.
+* ``impl='ref'``     — full-score oracle (tests only).
+
+GQA is handled natively (head grouping) in xla/ref; the Pallas path
+broadcasts KV heads (documented trade: on-chip dedup would index instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+NEG = -1e30
+
+
+def _mask(qpos, kpos, window, causal: bool, kv_len: int):
+    m = kpos[None, :] < kv_len
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def _chunks(x, bk):
+    B, H, Sk, D = x.shape
+    nk = Sk // bk
+    return x.reshape(B, H, nk, bk, D).transpose(2, 0, 1, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(qf, k, v, qpos_g, window, scale, bk, causal, kv_len):
+    out, _, _ = _flash_fwd_impl(qf, k, v, qpos_g, window, scale, bk, causal,
+                                kv_len)
+    return out
+
+
+def _flash_fwd_impl(qf, k, v, qpos, window, scale, bk, causal, kv_len):
+    # qf is 5D [B, Hkv, G, Sq, D]: the GQA group dim is kept SEPARATE from
+    # the sequence dim — merging them would prevent GSPMD from sharding the
+    # sequence (sharding is only representable on the outer factor of a
+    # merged dimension), replicating every attention intermediate.
+    B, Hkv, G, Sq, D = qf.shape
+    Dv = v.shape[-1]
+    nk = k.shape[2] // bk
+    kc, vc = _chunks(k, bk), _chunks(v, bk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, j = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = j * bk + jnp.arange(bk)
+        msk = _mask(qpos, kpos, window, causal, kv_len)
+        s = jnp.where(msk[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk[None, None, None], p, 0.0)
+        l2 = l * alpha + p.sum(-1)
+        acc2 = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l2, acc2), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nk)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qf.dtype)
+    return out, m, l
+
+
+def _flash_fwd(qf, k, v, qpos, window, scale, bk, causal, kv_len):
+    out, m, l = _flash_fwd_impl(qf, k, v, qpos, window, scale, bk, causal,
+                                kv_len)
+    return out, (qf, k, v, qpos, window, out, m, l)
+
+
+def _flash_bwd(scale, bk, causal, kv_len, res, dout):
+    qf, k, v, qpos, window, out, m, l = res
+    B, Hkv, G, Sq, D = qf.shape
+    nk = k.shape[2] // bk
+    kc, vc = _chunks(k, bk), _chunks(v, bk)
+    dof = dout.astype(jnp.float32)
+    delta = (dof * out.astype(jnp.float32)).sum(-1)       # [B,Hkv,G,Sq]
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+
+    def chunk(dq, xs):
+        kb, vb, j = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = j * bk + jnp.arange(bk)
+        msk = _mask(qpos, kpos, window, causal, kv_len)
+        p = jnp.exp(s - m[..., None]) * linv[..., None]
+        p = jnp.where(msk[None, None, None], p, 0.0)      # [B,Hkv,G,Sq,bk]
+        dv_b = jnp.einsum("bhgqk,bhgqd->bhkd", p, dof,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dof, vb.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        dk_b = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_b.astype(k.dtype), dv_b.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(chunk, dq0, (kc, vc, jnp.arange(nk)))
+    dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(k.shape)
+    dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(v.shape)
+    return (dq.astype(qf.dtype), dk, dv,
+            np.zeros(qpos.shape, jax.dtypes.float0),
+            np.zeros(jnp.shape(window), jax.dtypes.float0))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _chunked_gqa_attention(q, k, v, *, causal, window, q_offset, scale,
+                           block_k: int = 512):
+    """Online-softmax over KV chunks with flash custom-vjp.
+    q: [B,Hq,Sq,D]; k/v: [B,Hkv,Sk,(D|Dv)]."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = float(scale if scale is not None else D ** -0.5)
+    bk = min(block_k, Sk)
+    nk = -(-Sk // bk)
+    Skp = nk * bk
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    qf = q.reshape(B, Hkv, G, Sq, D)
+    qpos = (jnp.arange(Sq) + q_offset).astype(jnp.int32)
+    win = jnp.asarray(window if window is not None else (1 << 30), jnp.int32)
+    out = _flash(qf, k, v, qpos, win, scale, bk, causal, Sk)
+    return out.reshape(B, Hq, Sq, Dv)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int | None = None,
+              q_offset: int = 0, scale: float | None = None,
+              impl: str = "xla", block_k: int = 512,
+              interpret: bool = True) -> jnp.ndarray:
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, scale=scale)
+    if impl == "xla":
+        return _chunked_gqa_attention(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, scale=scale,
+                                      block_k=block_k)
+    if impl == "pallas":
+        Hq, Hkv = q.shape[1], k.shape[1]
+        if Hq != Hkv:
+            rep = Hq // Hkv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, scale=scale,
+                                      interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

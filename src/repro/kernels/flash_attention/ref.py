@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for (causal / sliding-window / GQA) attention.
+
+Materializes the full score matrix — only usable at test shapes; the
+production XLA path is the *chunked* online-softmax in ``ops.py`` and the
+TPU path is the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int | None = None,
+                  q_offset: int = 0, scale: float | None = None) -> jnp.ndarray:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D]; Hq % Hkv == 0.
+
+    ``q_offset``: absolute position of q[0] (decode: Sq=1, q_offset=cache
+    length).  ``window``: keys with q_pos - k_pos >= window are masked
+    (sliding-window attention).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, Hq, Sq, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import bucket_edges, segment_sum  # noqa: F401

@@ -1,0 +1,60 @@
+"""Public segment-sum wrapper + host-side edge bucketing."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .ref import segment_sum_ref
+from .segment_sum import segment_sum_bucketed
+
+
+def bucket_edges(seg_ids: np.ndarray, num_segments: int, block_n: int
+                 ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Host preprocessing: sort edges by segment, bucket into node blocks of
+    ``block_n`` destinations, pad each bucket's edge list to the max.
+
+    Returns (order, local_ids, max_edges): gather ``data[order]`` then
+    reshape to [NB, ME, D]; ``local_ids`` is [NB, ME] with -1 padding.
+    """
+    seg_ids = np.asarray(seg_ids)
+    order = np.argsort(seg_ids, kind="stable")
+    sorted_ids = seg_ids[order]
+    NB = -(-num_segments // block_n)
+    bucket_of = sorted_ids // block_n
+    counts = np.bincount(bucket_of, minlength=NB)
+    ME = max(int(counts.max(initial=0)), 1)
+    out_order = np.zeros((NB, ME), np.int64)
+    local = np.full((NB, ME), -1, np.int32)
+    starts = np.zeros(NB + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for b in range(NB):
+        c = counts[b]
+        sl = slice(starts[b], starts[b] + c)
+        out_order[b, :c] = order[sl]
+        local[b, :c] = sorted_ids[sl] - b * block_n
+    return out_order, local, ME
+
+
+def segment_sum(data: jnp.ndarray, seg_ids, num_segments: int, *,
+                impl: str = "xla", block_n: int = 128,
+                buckets: tuple | None = None,
+                interpret: bool = True) -> jnp.ndarray:
+    """Segment sum with selectable implementation.
+
+    impl='xla'    → jax.ops.segment_sum (scatter; lowering/roofline path)
+    impl='pallas' → bucketed one-hot-matmul kernel; ``buckets`` may carry
+                    precomputed ``bucket_edges`` output (static graphs).
+    """
+    if impl == "xla":
+        return segment_sum_ref(data, jnp.asarray(seg_ids), num_segments)
+    if impl == "pallas":
+        if buckets is None:
+            buckets = bucket_edges(np.asarray(seg_ids), num_segments, block_n)
+        out_order, local, ME = buckets
+        NB = local.shape[0]
+        gathered = data[out_order.reshape(-1)].reshape(NB, ME, data.shape[-1])
+        out = segment_sum_bucketed(gathered, jnp.asarray(local),
+                                   block_n=block_n, interpret=interpret)
+        return out.reshape(NB * block_n, data.shape[-1])[:num_segments]
+    raise ValueError(f"unknown impl {impl!r}")

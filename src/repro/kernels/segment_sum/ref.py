@@ -1,0 +1,10 @@
+"""Oracle: plain jax.ops.segment_sum (the scatter path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(data: jnp.ndarray, seg_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)

@@ -1,0 +1,154 @@
+"""Shared model substrate: parameter trees with logical sharding axes,
+norms, rotary embeddings, activation helpers.
+
+Parameters are declared once as :class:`ParamDef` trees carrying *logical*
+axis names ('embed', 'heads', 'mlp', 'experts', 'vocab', 'layers', ...).
+From one tree we derive (a) ShapeDtypeStructs for the multi-pod dry-run
+(no allocation), (b) NamedShardings via per-config logical→mesh rules
+(MaxText-style), (c) real initialized arrays for reduced-config smoke
+tests.  No flax — pure pytrees of jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]        # logical axis per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                # normal | zeros | ones | scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Tree = dict[str, Any]  # nested dict of ParamDef
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree: Tree) -> Tree:
+    out = {}
+    for k, v in tree.items():
+        out[k] = fn(v) if isinstance(v, ParamDef) else tree_map_defs(fn, v)
+    return out
+
+
+def abstract_params(tree: Tree) -> Tree:
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def logical_to_spec(axes: tuple[str | None, ...],
+                    rules: dict[str, Any]) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def param_shardings(tree: Tree, rules: dict[str, Any], mesh: Mesh) -> Tree:
+    return tree_map_defs(
+        lambda d: NamedSharding(mesh, logical_to_spec(d.axes, rules)), tree)
+
+
+def param_pspecs(tree: Tree, rules: dict[str, Any]) -> Tree:
+    return tree_map_defs(lambda d: logical_to_spec(d.axes, rules), tree)
+
+
+def init_params(tree: Tree, key: jax.Array) -> Tree:
+    flat: list[tuple[str, ParamDef]] = []
+
+    def walk(t, prefix):
+        for k, v in t.items():
+            if isinstance(v, ParamDef):
+                flat.append((prefix + k, v))
+            else:
+                walk(v, prefix + k + "/")
+    walk(tree, "")
+    keys = jax.random.split(key, max(len(flat), 1))
+    vals: dict[str, jnp.ndarray] = {}
+    for (name, d), kk in zip(flat, keys):
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, d.dtype)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, d.dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(kk, d.shape, jnp.float32) * scale).astype(d.dtype)
+        vals[name] = v
+
+    def rebuild(t, prefix):
+        out = {}
+        for k, v in t.items():
+            out[k] = vals[prefix + k] if isinstance(v, ParamDef) else rebuild(v, prefix + k + "/")
+        return out
+    return rebuild(tree, "")
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+            plus_one: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
+    i = jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+    return 1.0 / (jnp.asarray(theta, jnp.float32) ** (i / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """x: [..., S, D]; positions: [S] (or broadcastable).  theta may be a
+    traced scalar (per-layer RoPE bases under scan)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # [D/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray, inner_spec=None) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    if inner_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+        h = jax.lax.with_sharding_constraint(h, _P(*inner_spec))
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """CE via a one-hot mask-sum rather than take_along_axis: the gather
+    forces GSPMD to replicate the (huge, model-sharded) vocab dimension,
+    while `where(iota == target)` stays elementwise → shard-local partial
+    sums + one tiny all-reduce.  (Hillclimb #1, EXPERIMENTS.md §Perf.)"""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.where(vocab_iota == targets[..., None], logits, 0.0).sum(-1)
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

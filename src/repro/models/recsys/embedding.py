@@ -1,0 +1,65 @@
+"""EmbeddingBag and friends — built from take + segment_sum per the
+assignment (JAX has no native EmbeddingBag / CSR sparse).
+
+The lookup is the recsys hot path: tables are sharded row-wise over the
+'model' mesh axis (the paper's node-ID-space partitioner, reused), lookups
+lower to gathers + segment reductions that XLA SPMD turns into
+all-to-all-free per-shard gathers when indices are replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
+                  offsets: jnp.ndarray | None = None,
+                  per_sample_weights: jnp.ndarray | None = None,
+                  mode: str = "sum") -> jnp.ndarray:
+    """torch.nn.EmbeddingBag semantics.
+
+    * ``indices [M]`` flat indices; ``offsets [B]`` bag starts (first
+      element must be 0) — or ``indices [B, L]`` with no offsets (fixed-
+      size bags, padding id < 0 skipped).
+    """
+    if offsets is None:
+        idx = indices
+        valid = idx >= 0
+        emb = jnp.take(table, jnp.where(valid, idx, 0), axis=0)
+        emb = emb * valid[..., None]
+        if per_sample_weights is not None:
+            emb = emb * per_sample_weights[..., None]
+        s = emb.sum(axis=-2)
+        if mode == "sum":
+            return s
+        if mode == "mean":
+            return s / jnp.maximum(valid.sum(-1, keepdims=True), 1)
+        if mode == "max":
+            neg = jnp.where(valid[..., None], emb, -jnp.inf)
+            return neg.max(axis=-2)
+        raise ValueError(mode)
+    # ragged bags: segment ids from offsets
+    M = indices.shape[0]
+    B = offsets.shape[0]
+    seg = jnp.cumsum(jnp.zeros(M, jnp.int32).at[offsets[1:]].add(1))
+    emb = jnp.take(table, indices, axis=0)
+    if per_sample_weights is not None:
+        emb = emb * per_sample_weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(emb, seg, num_segments=B)
+    if mode == "mean":
+        s = jax.ops.segment_sum(emb, seg, num_segments=B)
+        cnt = jax.ops.segment_sum(jnp.ones(M), seg, num_segments=B)
+        return s / jnp.maximum(cnt, 1)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(emb, seg, num_segments=B)
+    raise ValueError(mode)
+
+
+def hash_embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Hash-trick lookup for open vocabularies: id → row via splitmix."""
+    x = ids.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return jnp.take(table, (x % table.shape[0]).astype(jnp.int32), axis=0)

@@ -1,0 +1,569 @@
+"""Config-driven LM transformer covering the five assigned architectures.
+
+One parameterized block family expresses:
+
+* llama-style GQA + RoPE + RMSNorm + SwiGLU      (yi-34b, stablelm-12b)
+* 5:1 local:global sliding-window + RoPE-base switch + 262k tied vocab
+  + logit softcap                                 (gemma3-1b)
+* MLA (latent-compressed KV) + shared+routed fine-grained MoE with
+  sigmoid aux-free routing + MTP                  (deepseek-v3-671b)
+* dense-FFN ∥ 128-expert top-2 MoE hybrid         (arctic-480b)
+
+Layers are grouped into homogeneous *layer groups* (dense prefix vs MoE
+rest, etc.); each group is a single ``lax.scan`` over stacked params with
+``jax.checkpoint`` remat — compile time and HLO size stay flat in depth.
+Per-layer window sizes / RoPE bases ride along as scanned arrays, so the
+gemma3 local/global pattern lives inside one scan.
+
+Attention is the chunked online-softmax from ``repro.kernels``
+(``impl='xla'`` for lowering/roofline; the Pallas kernel is the TPU path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ...kernels.flash_attention.ops import attention
+from ..common import (ParamDef, apply_rope, cross_entropy, rmsnorm, softcap,
+                      swiglu)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router: str = "softmax"          # 'softmax' | 'sigmoid_aux_free'
+    n_groups: int = 16               # dispatch groups (≡ data-axis shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 1e4
+    rope_theta_global: float | None = None   # gemma3 global layers
+    norm_eps: float = 1e-6
+    rmsnorm_plus_one: bool = False
+    embed_scale: bool = False                # gemma multiplies by sqrt(d)
+    tied_embeddings: bool = False
+    logit_softcap: float | None = None
+    window: int | None = None                # sliding window (local layers)
+    local_global_pattern: int | None = None  # N local per 1 global
+    moe: MoEConfig | None = None
+    n_dense_layers: int = 0                  # leading dense layers (deepseek)
+    moe_dense_parallel: bool = False         # arctic: dense ∥ MoE every layer
+    mla: MLAConfig | None = None
+    mtp: bool = False                        # deepseek multi-token prediction
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # logical activation sharding (batch, seq, embed) — sequence parallelism
+    # for the scan carry; None = no constraint (smoke tests)
+    act_spec: tuple | None = None
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_groups(self) -> list[tuple[str, int]]:
+        """Homogeneous (kind, count) groups scanned together."""
+        if self.moe is None:
+            return [("dense", self.n_layers)]
+        if self.moe_dense_parallel:
+            return [("hybrid", self.n_layers)]
+        groups = []
+        if self.n_dense_layers:
+            groups.append(("dense", self.n_dense_layers))
+        groups.append(("moe", self.n_layers - self.n_dense_layers))
+        return groups
+
+    def layer_meta(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(window, rope_theta) per layer — the scanned per-layer statics."""
+        windows, thetas = [], []
+        for i in range(self.n_layers):
+            is_global = (self.local_global_pattern is None or
+                         (i + 1) % (self.local_global_pattern + 1) == 0)
+            if self.window is not None and not is_global:
+                windows.append(self.window)
+                thetas.append(self.rope_theta)
+            else:
+                windows.append(1 << 30)
+                thetas.append(self.rope_theta_global or self.rope_theta)
+        return (jnp.asarray(windows, jnp.int32),
+                jnp.asarray(thetas, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# parameter declaration
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: TransformerConfig, L: int) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_model
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope + m.qk_rope
+        return {
+            "wq_a": ParamDef((L, d, m.q_lora), ("layers", "embed", None), dt),
+            "q_norm": ParamDef((L, m.q_lora), ("layers", None), dt, "ones"),
+            "wq_b": ParamDef((L, m.q_lora, cfg.n_heads * qk),
+                             ("layers", None, "heads"), dt),
+            "wkv_a": ParamDef((L, d, m.kv_lora + m.qk_rope),
+                              ("layers", "embed", None), dt),
+            "kv_norm": ParamDef((L, m.kv_lora), ("layers", None), dt, "ones"),
+            "wkv_b": ParamDef((L, m.kv_lora, cfg.n_heads * (m.qk_nope + m.v_dim)),
+                              ("layers", None, "heads"), dt),
+            "wo": ParamDef((L, cfg.n_heads * m.v_dim, d),
+                           ("layers", "heads", "embed"), dt),
+        }
+    return {
+        "wq": ParamDef((L, d, cfg.q_dim), ("layers", "embed", "heads"), dt),
+        "wk": ParamDef((L, d, cfg.kv_dim), ("layers", "embed", "kv"), dt),
+        "wv": ParamDef((L, d, cfg.kv_dim), ("layers", "embed", "kv"), dt),
+        "wo": ParamDef((L, cfg.q_dim, d), ("layers", "heads", "embed"), dt),
+    }
+
+
+def _ffn_defs(cfg: TransformerConfig, L: int, kind: str) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_model
+    out: dict = {}
+    if kind in ("dense", "hybrid"):
+        out.update({
+            "w_gate": ParamDef((L, d, cfg.d_ff), ("layers", "embed", "mlp"), dt),
+            "w_up": ParamDef((L, d, cfg.d_ff), ("layers", "embed", "mlp"), dt),
+            "w_down": ParamDef((L, cfg.d_ff, d), ("layers", "mlp", "embed"), dt),
+        })
+    if kind in ("moe", "hybrid"):
+        moe = cfg.moe
+        E, de = moe.n_experts, moe.d_expert
+        out.update({
+            "router": ParamDef((L, d, E), ("layers", "embed", None),
+                               jnp.float32),
+            "e_gate": ParamDef((L, E, d, de), ("layers", "experts", "embed", None), dt),
+            "e_up": ParamDef((L, E, d, de), ("layers", "experts", "embed", None), dt),
+            "e_down": ParamDef((L, E, de, d), ("layers", "experts", None, "embed"), dt),
+        })
+        if moe.router == "sigmoid_aux_free":
+            out["router_bias"] = ParamDef((L, E), ("layers", None),
+                                          jnp.float32, "zeros")
+        if moe.n_shared:
+            ds = de * moe.n_shared
+            out.update({
+                "s_gate": ParamDef((L, d, ds), ("layers", "embed", "mlp"), dt),
+                "s_up": ParamDef((L, d, ds), ("layers", "embed", "mlp"), dt),
+                "s_down": ParamDef((L, ds, d), ("layers", "mlp", "embed"), dt),
+            })
+    return out
+
+
+def param_defs(cfg: TransformerConfig) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_model
+    tree: dict = {
+        "embed": ParamDef((cfg.vocab, d), ("vocab", "embed"), dt),
+        "final_norm": ParamDef((d,), (None,), dt, "ones"),
+    }
+    if not cfg.tied_embeddings:
+        tree["lm_head"] = ParamDef((d, cfg.vocab), ("embed", "vocab"), dt)
+    for gi, (kind, L) in enumerate(cfg.layer_groups()):
+        g = {"attn_norm": ParamDef((L, d), ("layers", None), dt, "ones"),
+             "ffn_norm": ParamDef((L, d), ("layers", None), dt, "ones")}
+        g.update(_attn_defs(cfg, L))
+        g.update(_ffn_defs(cfg, L, kind))
+        tree[f"group{gi}"] = g
+    if cfg.mtp:
+        g = {"attn_norm": ParamDef((1, d), ("layers", None), dt, "ones"),
+             "ffn_norm": ParamDef((1, d), ("layers", None), dt, "ones"),
+             "mtp_proj": ParamDef((1, 2 * d, d), ("layers", "embed", None), dt)}
+        g.update(_attn_defs(cfg, 1))
+        g.update(_ffn_defs(cfg, 1, "dense" if cfg.moe is None else "moe"))
+        tree["mtp"] = g
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _gqa_attention(p, x, cfg: TransformerConfig, positions, window, theta,
+                   cache_kv=None, attn_impl: str = "xla"):
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, theta)
+    v = v.transpose(0, 2, 1, 3)
+    if cache_kv is not None:
+        ck, cv, cache_len = cache_kv
+        k = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, cache_len, 0))
+        v = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, cache_len, 0))
+        q_offset = cache_len
+    else:
+        q_offset = 0
+    o = attention(q, k, v, causal=True, window=window, q_offset=q_offset,
+                  impl=attn_impl)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def _mla_attention(p, x, cfg: TransformerConfig, positions, window, theta,
+                   cache_kv=None, attn_impl: str = "xla"):
+    """DeepSeek MLA: queries from a low-rank latent; K/V from a 512-dim
+    compressed latent + a shared 64-dim RoPE key.  The cache is the latent
+    — 576 B/token/layer.
+
+    Two paths:
+
+    * **prefill/train** — materialize per-head K/V from the latent (dense
+      matmuls amortize over the whole sequence);
+    * **decode (absorbed)** — the famous MLA absorption: fold ``W_uk`` into
+      the query and ``W_uv`` into the output so attention runs *in latent
+      space* against the cache directly.  Reconstructing K/V per step is
+      O(S·H·(dk+dv)) = 17 GB/device at 32k context (measured, baseline
+      dry-run); absorbed it is O(S·(c+rope)) — ~64× less.
+    """
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm(jnp.einsum("bsd,dq->bsq", x, p["wq_a"]), p["q_norm"],
+                 cfg.norm_eps)
+    q = jnp.einsum("bsq,qh->bsh", cq, p["wq_b"]).reshape(
+        B, S, H, m.qk_nope + m.qk_rope)
+    q_nope, q_pe = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    kv_a = jnp.einsum("bsd,dk->bsk", x, p["wkv_a"])
+    c_kv_new = rmsnorm(kv_a[..., :m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_pe_new = kv_a[..., m.kv_lora:]                       # [B, S, rope]
+    q_pe = apply_rope(q_pe.transpose(0, 2, 1, 3), positions, theta)
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+
+    if cache_kv is not None:
+        # ---------------- absorbed decode path ----------------
+        cc, ckpe, cache_len = cache_kv
+        c_kv = jax.lax.dynamic_update_slice(cc, c_kv_new.astype(cc.dtype),
+                                            (0, cache_len, 0))
+        k_pe_lat = jax.lax.dynamic_update_slice(
+            ckpe, k_pe_new.astype(ckpe.dtype), (0, cache_len, 0))
+        Sk = c_kv.shape[1]
+        kv_pos = jnp.arange(Sk)
+        k_pe = apply_rope(k_pe_lat[:, None, :, :], kv_pos, theta)[:, 0]
+        # W_uk per head: wkv_b[:, h*(nope+v) : ...nope] — absorb into q
+        wkv = p["wkv_b"].reshape(m.kv_lora, H, m.qk_nope + m.v_dim)
+        w_uk = wkv[:, :, : m.qk_nope]                      # [c, H, dk]
+        w_uv = wkv[:, :, m.qk_nope:]                       # [c, H, dv]
+        q_lat = jnp.einsum("bshk,chk->bhsc", q_nope, w_uk) # latent queries
+        # attention in latent space: keys = [c_kv ; k_pe], dim c+rope
+        q_cat = jnp.concatenate([q_lat, q_pe], axis=-1)    # [B,H,S,c+rope]
+        k_cat = jnp.concatenate([c_kv, k_pe], axis=-1)[:, None]  # [B,1,Sk,·]
+        o_lat = attention(q_cat, k_cat, c_kv[:, None], causal=True,
+                          window=window, q_offset=cache_len, scale=scale,
+                          impl=attn_impl)                  # [B,H,S,c]
+        o = jnp.einsum("bhsc,chv->bshv", o_lat, w_uv).reshape(
+            B, S, H * m.v_dim)
+        out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+        return out, (c_kv, k_pe_lat)
+
+    # ---------------- prefill / train path ----------------
+    c_kv = c_kv_new
+    Sk = c_kv.shape[1]
+    kv = jnp.einsum("bsk,kh->bsh", c_kv, p["wkv_b"]).reshape(
+        B, Sk, H, m.qk_nope + m.v_dim)
+    k_nope, v = kv[..., :m.qk_nope], kv[..., m.qk_nope:]
+    kv_pos = jnp.arange(Sk)
+    k_pe = apply_rope(k_pe_new[:, None, :, :], kv_pos, theta)  # [B,1,Sk,r]
+    qh = jnp.concatenate([q_nope.transpose(0, 2, 1, 3), q_pe], axis=-1)
+    kh = jnp.concatenate([k_nope.transpose(0, 2, 1, 3),
+                          jnp.broadcast_to(k_pe, (B, H, Sk, m.qk_rope))], -1)
+    vh = v.transpose(0, 2, 1, 3)
+    o = attention(qh, kh, vh, causal=True, window=window, q_offset=0,
+                  scale=scale, impl=attn_impl)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, (c_kv, k_pe_new)
+
+
+def _dispatch_group(xf_g, ids_g, w_g, E, K, C):
+    """One dispatch group: sort assignments by expert, slot = rank within
+    expert, drop beyond capacity, scatter to [E, C, d] buffers.  vmapped
+    over groups so every scatter/gather carries an explicit batch dim that
+    GSPMD shards (broadcast `gidx` fancy-indexing defeated its partitioner
+    — 112 GB/device replicas; EXPERIMENTS.md §Perf)."""
+    T, d = xf_g.shape
+    flat_e = ids_g.reshape(T * K)
+    flat_w = w_g.reshape(T * K)
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(T * K) - starts[se]
+    keep = slot < C
+    tok = order // K
+    slot_c = jnp.where(keep, slot, 0).astype(jnp.int32)
+    src = jnp.where(keep[:, None], xf_g[tok], 0)
+    buf = jnp.zeros((E, C, d), xf_g.dtype).at[se, slot_c].add(src)
+    comb_w = jnp.where(keep, flat_w[order], 0.0)
+    return buf, se, slot_c, tok, comb_w
+
+
+def _combine_group(h_g, se, slot_c, tok, comb_w, T):
+    back = h_g[se, slot_c] * comb_w[:, None].astype(h_g.dtype)
+    return jnp.zeros((T, h_g.shape[-1]), h_g.dtype).at[tok].add(back)
+
+
+def _moe_ffn(p, x, cfg: TransformerConfig):
+    """Grouped top-k MoE: vmapped sort-based dispatch (GShard grouping) →
+    batched expert GEMMs (E sharded over 'model') → vmapped combine."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, K = moe.n_experts, moe.top_k
+    G = moe.n_groups if B % max(moe.n_groups, 1) == 0 else 1
+    T = (B // G) * S                                    # tokens per group
+    bax = cfg.act_spec[0] if cfg.act_spec is not None else None
+
+    def gc(t, *rest):  # constrain dim0 = groups to the batch axis
+        if bax is None:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, P(bax, *rest, *([None] * (t.ndim - 1 - len(rest)))))
+
+    xf = gc(x.reshape(G, T, d))
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = gc(logits)
+    if moe.router == "sigmoid_aux_free":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"][None, None, :]
+        _, ids = jax.lax.top_k(sel, K)                  # bias only routes
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    else:
+        _, ids = jax.lax.top_k(logits, K)
+        w = jax.nn.softmax(jnp.take_along_axis(logits, ids, axis=-1), -1)
+
+    C = int(math.ceil(T * K * moe.capacity_factor / E))
+    buf, se, slot_c, tok, comb_w = jax.vmap(
+        functools.partial(_dispatch_group, E=E, K=K, C=C))(xf, ids, w)
+    buf = gc(buf, "model")
+    g = gc(jnp.einsum("gecd,edf->gecf", buf, p["e_gate"]), "model")
+    u = gc(jnp.einsum("gecd,edf->gecf", buf, p["e_up"]), "model")
+    h = gc(jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, p["e_down"]),
+           "model")
+    out = gc(jax.vmap(functools.partial(_combine_group, T=T))(
+        h, se, slot_c, tok, comb_w))
+    me = jax.nn.softmax(logits, -1).mean((0, 1))
+    ce = jnp.bincount(ids.reshape(-1), length=E) / (G * T * K)
+    aux = E * jnp.sum(me * ce)
+    out = out.reshape(B, S, d)
+    if moe.n_shared:
+        sh_spec = ((cfg.act_spec[0], None, "model")
+                   if cfg.act_spec is not None else None)
+        out = out + swiglu(x, p["s_gate"], p["s_up"], p["s_down"], sh_spec)
+    return out, aux
+
+
+def _layer(kind: str, cfg: TransformerConfig, attn_impl: str):
+    attn_fn = _mla_attention if cfg.mla is not None else _gqa_attention
+
+    def layer(x, p, positions, window, theta, cache_kv=None):
+        h, new_kv = attn_fn(p, rmsnorm(x, p["attn_norm"], cfg.norm_eps,
+                                       cfg.rmsnorm_plus_one),
+                            cfg, positions, window, theta, cache_kv,
+                            attn_impl)
+        x = x + h
+        y = rmsnorm(x, p["ffn_norm"], cfg.norm_eps, cfg.rmsnorm_plus_one)
+        ff_spec = ((cfg.act_spec[0], None, "model")
+                   if cfg.act_spec is not None else None)
+        aux = 0.0
+        if kind == "dense":
+            f = swiglu(y, p["w_gate"], p["w_up"], p["w_down"], ff_spec)
+        elif kind == "moe":
+            f, aux = _moe_ffn(p, y, cfg)
+        else:  # hybrid: dense residual FFN ∥ MoE (arctic)
+            f1 = swiglu(y, p["w_gate"], p["w_up"], p["w_down"], ff_spec)
+            f2, aux = _moe_ffn(p, y, cfg)
+            f = f1 + f2
+        return x + f, aux, new_kv
+
+    return layer
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _scan_group(kind, cfg, params_g, x, positions, windows, thetas,
+                cache_g=None, cache_len=None, attn_impl="xla",
+                return_cache=False):
+    layer = _layer(kind, cfg, attn_impl)
+
+    def body(carry, xs):
+        x, aux = carry
+        if cache_g is not None:
+            p, w, th, ck, cv = xs
+            x2, a, new_kv = layer(x, p, positions, w, th, (ck, cv, cache_len))
+        else:
+            p, w, th = xs
+            x2, a, new_kv = layer(x, p, positions, w, th, None)
+        if cfg.act_spec is not None:
+            x2 = jax.lax.with_sharding_constraint(x2, P(*cfg.act_spec))
+        ys = new_kv if (return_cache or cache_g is not None) else None
+        return (x2, aux + a), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params_g, windows, thetas)
+    if cache_g is not None:
+        xs = xs + tuple(cache_g)
+    (x, aux), ys = jax.lax.scan(body, (x, 0.0), xs)
+    return x, aux, ys
+
+
+def forward(params, tokens, cfg: TransformerConfig, *, attn_impl="xla",
+            return_cache=False, cache=None, cache_len=None,
+            positions=None):
+    """tokens [B, S] → logits [B, S, V] (+ aux loss, + per-group caches)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    if positions is None:
+        positions = jnp.arange(S)
+    windows, thetas = cfg.layer_meta()
+    aux_total = 0.0
+    caches_out = []
+    off = 0
+    for gi, (kind, L) in enumerate(cfg.layer_groups()):
+        g = params[f"group{gi}"]
+        w_g, t_g = windows[off:off + L], thetas[off:off + L]
+        cache_g = None if cache is None else cache[gi]
+        x, aux, ys = _scan_group(kind, cfg, g, x, positions, w_g, t_g,
+                                 cache_g, cache_len, attn_impl, return_cache)
+        aux_total = aux_total + aux
+        caches_out.append(ys)
+        off += L
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, cfg.rmsnorm_plus_one)
+    head = (params["embed"].T if cfg.tied_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if cfg.act_spec is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(cfg.act_spec[0], None, "model"))
+    logits = softcap(logits, cfg.logit_softcap)
+    caches = caches_out if (return_cache or cache is not None) else None
+    return logits, aux_total, caches, x
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, attn_impl="xla"):
+    tokens = batch["tokens"]
+    logits, aux, _, hidden = forward(params, tokens, cfg, attn_impl=attn_impl)
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    mtp_loss = 0.0
+    if cfg.mtp:
+        # DeepSeek-V3 MTP depth 1: combine hidden(t) with embed(t+1), run
+        # one extra block, predict token t+2 through the shared head
+        g = params["mtp"]
+        emb_next = params["embed"][tokens[:, 1:]].astype(cfg.dtype)
+        h = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1)
+        h = jnp.einsum("bsd,dk->bsk", h, g["mtp_proj"][0])
+        kind = "dense" if cfg.moe is None else "moe"
+        layer = _layer(kind, cfg, attn_impl)
+        S1 = h.shape[1]
+        p1 = jax.tree.map(lambda a: a[0], {k: v for k, v in g.items()
+                                           if k != "mtp_proj"})
+        windows, thetas = cfg.layer_meta()
+        h, mtp_aux, _ = layer(h, p1, jnp.arange(S1), windows[-1], thetas[-1])
+        head = (params["embed"].T if cfg.tied_embeddings else params["lm_head"])
+        mtp_logits = softcap(jnp.einsum("bsd,dv->bsv", h, head.astype(cfg.dtype)),
+                             cfg.logit_softcap)
+        mtp_loss = cross_entropy(mtp_logits[:, :-1], tokens[:, 2:])
+        aux = aux + mtp_aux
+    total = loss + 0.01 * aux + 0.3 * mtp_loss
+    return total, {"loss": loss, "aux": aux, "mtp": mtp_loss}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Per-group KV caches.  GQA: (k, v) [L, B, Hkv, Smax, Dh]; MLA:
+    (c_kv, k_pe) latents."""
+    caches = []
+    for kind, L in cfg.layer_groups():
+        if cfg.mla is not None:
+            m = cfg.mla
+            caches.append((
+                jnp.zeros((L, batch, max_len, m.kv_lora), cfg.dtype),
+                jnp.zeros((L, batch, max_len, m.qk_rope), cfg.dtype)))
+        else:
+            shape = (L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            caches.append((jnp.zeros(shape, cfg.dtype),
+                           jnp.zeros(shape, cfg.dtype)))
+    return caches
+
+
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int):
+    return _abstract_cache(cfg, batch, max_len)
+
+
+def _abstract_cache(cfg, batch, max_len):
+    caches = []
+    for kind, L in cfg.layer_groups():
+        if cfg.mla is not None:
+            m = cfg.mla
+            caches.append((
+                jax.ShapeDtypeStruct((L, batch, max_len, m.kv_lora), cfg.dtype),
+                jax.ShapeDtypeStruct((L, batch, max_len, m.qk_rope), cfg.dtype)))
+        else:
+            s = (L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            caches.append((jax.ShapeDtypeStruct(s, cfg.dtype),
+                           jax.ShapeDtypeStruct(s, cfg.dtype)))
+    return caches
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig, attn_impl="xla"):
+    """Prefill: forward + return caches (stacked per group) + last logits."""
+    logits, _, caches, _ = forward(params, tokens, cfg, attn_impl=attn_impl,
+                                   return_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: TransformerConfig,
+                attn_impl="xla"):
+    """One decode step: tokens [B, 1] against caches filled to cache_len."""
+    positions = cache_len + jnp.arange(tokens.shape[1])  # absolute positions
+    logits, _, new_cache, _ = forward(params, tokens, cfg,
+                                      attn_impl=attn_impl, cache=cache,
+                                      cache_len=cache_len,
+                                      positions=positions)
+    return logits[:, -1], new_cache

@@ -1,0 +1,52 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+``bf16``  — cast the fp32 grads to bf16 before the DP reduction (halves
+collective bytes; the reduction itself accumulates in fp32 on TPU).
+``int8``  — per-tensor symmetric int8 with a fp32 scale (4× fewer bytes);
+stochastic rounding bounds bias, and because XLA all-reduces whatever
+dtype flows through the graph, quantizing *before* the pjit boundary
+shrinks the wire format.
+
+These are graph-level transforms: under pjit/GSPMD the all-reduce happens
+wherever the sharded grads are consumed, so compressing the values that
+cross that boundary is exactly compressing the collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(g: jnp.ndarray, key) -> tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    x = gf / scale
+    # stochastic rounding
+    noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_tree(grads, kind: str = "bf16", key=None):
+    if kind == "bf16":
+        return {"kind": "bf16",
+                "data": jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)}
+    if kind == "int8":
+        leaves, treedef = jax.tree.flatten(grads)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        keys = jax.random.split(key, len(leaves))
+        qs = [_quant_int8(g, k) for g, k in zip(leaves, keys)]
+        return {"kind": "int8", "treedef": treedef,
+                "q": [q for q, _ in qs], "scale": [s for _, s in qs]}
+    raise ValueError(f"unknown compression {kind!r}")
+
+
+def decompress_tree(packed, like):
+    if packed["kind"] == "bf16":
+        return jax.tree.map(lambda g, l: g.astype(jnp.float32),
+                            packed["data"], like)
+    if packed["kind"] == "int8":
+        leaves = [q.astype(jnp.float32) * s
+                  for q, s in zip(packed["q"], packed["scale"])]
+        return jax.tree.unflatten(packed["treedef"], leaves)
+    raise ValueError(packed["kind"])

@@ -1,0 +1,139 @@
+"""Fault tolerance & straggler mitigation for 1000+-node deployments.
+
+* :class:`HeartbeatTracker` — detects dead partitions/hosts from missed
+  heartbeats (coordinator-side logic; transport is pluggable).
+* :func:`elastic_replan` — when ``P`` storage partitions must be served by
+  ``W < P`` (or ``> P``) surviving workers, reassigns partitions with
+  consistent hashing so only the failed node's shard moves.
+* :class:`StragglerMitigator` — the multipoint-retrieval scheduler:
+  deficit-based work stealing over per-partition fetch queues, plus
+  hedged ("backup") requests for the slowest percentile, the standard
+  tail-latency defense.
+* :func:`retry` — bounded exponential backoff for storage operations.
+
+These are deliberately transport-agnostic (pure logic + callables) so unit
+tests can drive them deterministically — the same structure a real
+multi-host deployment would wire to its RPC layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable
+
+
+def retry(fn: Callable, *, attempts: int = 4, base_delay: float = 0.01,
+          retryable=(IOError, KeyError, TimeoutError),
+          sleep: Callable = time.sleep):
+    last = None
+    for i in range(attempts):
+        try:
+            return fn()
+        except retryable as e:  # noqa: PERF203
+            last = e
+            if i + 1 < attempts:
+                sleep(base_delay * (2 ** i))
+    raise last
+
+
+class HeartbeatTracker:
+    def __init__(self, workers: Iterable[str], timeout: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.timeout = timeout
+        self.clock = clock
+        self.last_seen = {w: clock() for w in workers}
+
+    def beat(self, worker: str) -> None:
+        self.last_seen[worker] = self.clock()
+
+    def dead(self) -> list[str]:
+        now = self.clock()
+        return [w for w, t in self.last_seen.items()
+                if now - t > self.timeout]
+
+    def alive(self) -> list[str]:
+        now = self.clock()
+        return [w for w, t in self.last_seen.items()
+                if now - t <= self.timeout]
+
+
+def elastic_replan(partitions: int, workers: list[str]) -> dict[int, str]:
+    """Consistent-hash partition→worker assignment: when one worker dies,
+    only its partitions move (stable for the survivors)."""
+    import hashlib
+
+    def h(s: str) -> int:
+        return int(hashlib.md5(s.encode()).hexdigest()[:8], 16)
+
+    ring = sorted((h(f"{w}#{v}"), w) for w in workers for v in range(8))
+    out = {}
+    for p in range(partitions):
+        hp = h(f"part{p}")
+        for hv, w in ring:
+            if hv >= hp:
+                out[p] = w
+                break
+        else:
+            out[p] = ring[0][1]
+    return out
+
+
+@dataclasses.dataclass
+class FetchTask:
+    partition: int
+    key: Any
+    size_est: int
+
+
+class StragglerMitigator:
+    """Deficit-based scheduler over per-partition queues with hedging.
+
+    ``assign(next_free_worker)`` hands out the task from the queue with the
+    largest remaining byte deficit; when < ``hedge_frac`` of tasks remain,
+    outstanding tasks are replicated to idle workers (first completion
+    wins) — bounded duplicate work for a bounded tail.
+    """
+
+    def __init__(self, tasks: list[FetchTask], hedge_frac: float = 0.05):
+        self.queues: dict[int, list[FetchTask]] = {}
+        for t in tasks:
+            self.queues.setdefault(t.partition, []).append(t)
+        self.total = sum(t.size_est for t in tasks)
+        self.outstanding: dict[Any, FetchTask] = {}
+        self.done: set[Any] = set()
+        self.hedge_threshold = max(1, int(len(tasks) * hedge_frac))
+        self.duplicates = 0
+
+    def remaining(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def assign(self) -> FetchTask | None:
+        # largest-deficit queue first
+        best = None
+        for p, q in self.queues.items():
+            if not q:
+                continue
+            deficit = sum(t.size_est for t in q)
+            if best is None or deficit > best[0]:
+                best = (deficit, p)
+        if best is not None:
+            task = self.queues[best[1]].pop(0)
+            self.outstanding[task.key] = task
+            return task
+        # hedge: replicate an outstanding task for an idle worker
+        if self.outstanding and len(self.outstanding) <= self.hedge_threshold:
+            task = next(iter(self.outstanding.values()))
+            self.duplicates += 1
+            return task
+        return None
+
+    def complete(self, key: Any) -> bool:
+        """Returns True if this completion is the first for the task."""
+        if key in self.done:
+            return False
+        self.done.add(key)
+        self.outstanding.pop(key, None)
+        return True
+
+    def finished(self) -> bool:
+        return not self.outstanding and self.remaining() == 0

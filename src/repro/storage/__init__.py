@@ -1,0 +1,1 @@
+from . import columnar, kv  # noqa: F401

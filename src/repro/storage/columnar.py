@@ -1,0 +1,146 @@
+"""Columnar (de)serialization of deltas and eventlists (paper §4.2).
+
+Each delta is split into independently fetchable components so a
+structure-only retrieval reads zero attribute bytes (paper fig 8d):
+
+* ``struct``     — node_add / node_del / edge_add / edge_del index arrays
+* ``nodeattr``   — (slot, col, new, old) quads
+* ``edgeattr``   — (slot, col, new, old) quads
+
+and each leaf-eventlist into:
+
+* ``elist_struct``    — (time, etype, slot) of membership events
+* ``elist_nodeattr``  — (time, slot, col, new, old) of UNA events
+* ``elist_edgeattr``  — ... of UEA events
+* ``elist_transient`` — (time, etype, slot) of transient events
+
+The wire format is a tiny self-describing array bundle (name, dtype, shape,
+raw bytes) — no pickling, so any language/storage system could read it.
+"""
+from __future__ import annotations
+
+import struct as _struct
+
+import numpy as np
+
+from ..core.deltas import AttrDelta, Delta
+from ..core.events import (EV_DEL_EDGE, EV_DEL_NODE, EV_NEW_EDGE, EV_NEW_NODE,
+                           EV_TRANS_EDGE, EV_TRANS_NODE, EV_UPD_EDGE_ATTR,
+                           EV_UPD_NODE_ATTR, EventList)
+
+STRUCT = "struct"
+NODEATTR = "nodeattr"
+EDGEATTR = "edgeattr"
+ELIST_STRUCT = "elist_struct"
+ELIST_NODEATTR = "elist_nodeattr"
+ELIST_EDGEATTR = "elist_edgeattr"
+ELIST_TRANSIENT = "elist_transient"
+
+DELTA_COMPONENTS = (STRUCT, NODEATTR, EDGEATTR)
+ELIST_COMPONENTS = (ELIST_STRUCT, ELIST_NODEATTR, ELIST_EDGEATTR, ELIST_TRANSIENT)
+
+
+# ---------------------------------------------------------------------------
+# array-bundle wire format
+# ---------------------------------------------------------------------------
+
+def pack_arrays(arrays: dict[str, np.ndarray]) -> bytes:
+    out = [_struct.pack("<I", len(arrays))]
+    for name, a in arrays.items():
+        a = np.ascontiguousarray(a)
+        nb = name.encode()
+        # dtype.str is '<V2' for ml_dtypes types (bfloat16 &c.) — the name
+        # round-trips through np.dtype() once ml_dtypes is imported
+        ds = a.dtype.str
+        dt = (a.dtype.name if ds.startswith(("<V", "|V", ">V")) else ds).encode()
+        out.append(_struct.pack("<I", len(nb)) + nb)
+        out.append(_struct.pack("<I", len(dt)) + dt)
+        out.append(_struct.pack("<I", a.ndim) + _struct.pack(f"<{a.ndim}q", *a.shape))
+        raw = a.tobytes()
+        out.append(_struct.pack("<Q", len(raw)) + raw)
+    return b"".join(out)
+
+
+def unpack_arrays(data: bytes) -> dict[str, np.ndarray]:
+    pos = 0
+    (n,) = _struct.unpack_from("<I", data, pos); pos += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (ln,) = _struct.unpack_from("<I", data, pos); pos += 4
+        name = data[pos:pos + ln].decode(); pos += ln
+        (ld,) = _struct.unpack_from("<I", data, pos); pos += 4
+        dt = data[pos:pos + ld].decode(); pos += ld
+        (nd,) = _struct.unpack_from("<I", data, pos); pos += 4
+        shape = _struct.unpack_from(f"<{nd}q", data, pos); pos += 8 * nd
+        (nraw,) = _struct.unpack_from("<Q", data, pos); pos += 8
+        a = np.frombuffer(data[pos:pos + nraw], dtype=np.dtype(dt)).reshape(shape)
+        pos += nraw
+        out[name] = a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# delta components
+# ---------------------------------------------------------------------------
+
+def encode_delta_struct(d: Delta) -> bytes:
+    return pack_arrays({"node_add": d.node_add, "node_del": d.node_del,
+                        "edge_add": d.edge_add, "edge_del": d.edge_del})
+
+
+def decode_delta_struct(b: bytes) -> dict[str, np.ndarray]:
+    return unpack_arrays(b)
+
+
+def encode_attr(a: AttrDelta) -> bytes:
+    return pack_arrays({"slot": a.slot, "col": a.col, "new": a.new, "old": a.old})
+
+
+def decode_attr(b: bytes) -> AttrDelta:
+    d = unpack_arrays(b)
+    return AttrDelta(d["slot"], d["col"], d["new"], d["old"])
+
+
+def encode_delta(d: Delta) -> dict[str, bytes]:
+    return {STRUCT: encode_delta_struct(d),
+            NODEATTR: encode_attr(d.node_attr),
+            EDGEATTR: encode_attr(d.edge_attr)}
+
+
+def decode_delta(parts: dict[str, bytes]) -> Delta:
+    s = decode_delta_struct(parts[STRUCT])
+    na = decode_attr(parts[NODEATTR]) if NODEATTR in parts else AttrDelta.empty()
+    ea = decode_attr(parts[EDGEATTR]) if EDGEATTR in parts else AttrDelta.empty()
+    return Delta(s["node_add"], s["node_del"], s["edge_add"], s["edge_del"], na, ea)
+
+
+# ---------------------------------------------------------------------------
+# eventlist components
+# ---------------------------------------------------------------------------
+
+def encode_eventlist(ev: EventList) -> dict[str, bytes]:
+    et = ev.etype
+    m_struct = np.isin(et, (EV_NEW_NODE, EV_DEL_NODE, EV_NEW_EDGE, EV_DEL_EDGE))
+    m_na = et == EV_UPD_NODE_ATTR
+    m_ea = et == EV_UPD_EDGE_ATTR
+    m_tr = np.isin(et, (EV_TRANS_EDGE, EV_TRANS_NODE))
+    # `pos` = index within the full leaf-eventlist, so arbitrary prefixes can
+    # be replayed per-component without a global merge.
+    pos = np.arange(len(ev), dtype=np.int32)
+
+    def sub(mask, with_attr: bool) -> bytes:
+        arrays = {"pos": pos[mask], "time": ev.time[mask],
+                  "etype": et[mask], "slot": ev.slot[mask]}
+        if with_attr:
+            arrays.update({"col": ev.attr_col[mask], "new": ev.value[mask],
+                           "old": ev.old_value[mask]})
+        return pack_arrays(arrays)
+
+    return {ELIST_STRUCT: sub(m_struct, False),
+            ELIST_NODEATTR: sub(m_na, True),
+            ELIST_EDGEATTR: sub(m_ea, True),
+            ELIST_TRANSIENT: sub(m_tr, False)}
+
+
+def decode_eventlist(parts: dict[str, bytes]) -> dict[str, dict[str, np.ndarray]]:
+    return {name: unpack_arrays(b) for name, b in parts.items()}

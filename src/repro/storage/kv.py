@@ -1,0 +1,266 @@
+"""Persistent key-value backends (paper §4.2).
+
+The paper stores every delta / eventlist component under the key
+``⟨partition_id, delta_id, component⟩`` in Kyoto Cabinet, and notes that any
+get/put store (HBase, Cassandra, ...) can be plugged in.  We keep exactly
+that contract: keys are ``(partition_id: int, delta_id: int, component:
+str)``, values are opaque bytes.  Three backends:
+
+* :class:`MemKV` — dict-backed (the "cloud cache" stand-in; also used by
+  unit tests).
+* :class:`LogFileKV` — a single append-only log + JSON offset index per
+  directory.  Append-only gives crash-safe writes (torn tails are dropped on
+  recovery) — this is also what the fault-tolerant checkpointer builds on.
+* :class:`PartitionedKV` — routes by ``partition_id`` to one backend per
+  storage unit (the paper's one-Kyoto-instance-per-machine deployment).
+
+All backends record byte-level read/write counters so benchmarks can report
+fetched bytes (the planner's cost model is bytes fetched).
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+from typing import Iterable
+
+Key = tuple[int, int, str]
+
+
+def _key_str(key: Key) -> str:
+    p, d, c = key
+    return f"{p}/{d}/{c}"
+
+
+class KVStats:
+    def __init__(self) -> None:
+        self.gets = 0
+        self.puts = 0
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+    def reset(self) -> None:
+        self.__init__()
+
+
+class KVStore:
+    """get/put/contains/delete over (partition_id, delta_id, component)."""
+
+    def __init__(self) -> None:
+        self.stats = KVStats()
+
+    def get(self, key: Key) -> bytes:
+        raise NotImplementedError
+
+    def put(self, key: Key, value: bytes) -> None:
+        raise NotImplementedError
+
+    def delete(self, key: Key) -> None:
+        raise NotImplementedError
+
+    def __contains__(self, key: Key) -> bool:
+        raise NotImplementedError
+
+    def keys(self) -> Iterable[Key]:
+        raise NotImplementedError
+
+    def multi_get(self, keys: list[Key]) -> list[bytes]:
+        """Batched fetch — single round-trip in a real remote store."""
+        return [self.get(k) for k in keys]
+
+    def total_bytes(self) -> int:
+        return sum(len(self.get(k)) for k in self.keys())
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class MemKV(KVStore):
+    def __init__(self) -> None:
+        super().__init__()
+        self._d: dict[Key, bytes] = {}
+
+    def get(self, key: Key) -> bytes:
+        v = self._d[key]
+        self.stats.gets += 1
+        self.stats.bytes_read += len(v)
+        return v
+
+    def put(self, key: Key, value: bytes) -> None:
+        self._d[key] = bytes(value)
+        self.stats.puts += 1
+        self.stats.bytes_written += len(value)
+
+    def delete(self, key: Key) -> None:
+        self._d.pop(key, None)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._d
+
+    def keys(self):
+        return list(self._d.keys())
+
+    def total_bytes(self) -> int:
+        return sum(len(v) for v in self._d.values())
+
+
+_MAGIC = b"RKV1"
+
+
+class LogFileKV(KVStore):
+    """Append-only log file + offset index.
+
+    Record layout: ``[u32 keylen][key utf8][u64 vallen][value bytes]``.
+    The index (`index.json`) is written on flush; on open, the log is
+    scanned from the last indexed offset so an unflushed-but-complete tail
+    is recovered and a torn (partially written) tail record is truncated —
+    the crash-consistency story for checkpointing.
+    """
+
+    def __init__(self, directory: str) -> None:
+        super().__init__()
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self.log_path = os.path.join(directory, "kv.log")
+        self.index_path = os.path.join(directory, "index.json")
+        self._index: dict[str, tuple[int, int]] = {}  # key -> (offset, length)
+        self._lock = threading.Lock()
+        self._recover()
+        self._fh = open(self.log_path, "ab")
+
+    def _recover(self) -> None:
+        indexed_end = 0
+        if os.path.exists(self.index_path):
+            with open(self.index_path) as f:
+                payload = json.load(f)
+            self._index = {k: tuple(v) for k, v in payload["index"].items()}
+            indexed_end = payload["log_end"]
+        if not os.path.exists(self.log_path):
+            open(self.log_path, "wb").close()
+            return
+        size = os.path.getsize(self.log_path)
+        if size < indexed_end:  # corrupt index — rebuild from scratch
+            self._index = {}
+            indexed_end = 0
+        with open(self.log_path, "rb") as f:
+            f.seek(indexed_end)
+            pos = indexed_end
+            good_end = indexed_end
+            while True:
+                hdr = f.read(8)
+                if len(hdr) < 8:
+                    break
+                magic, klen = hdr[:4], struct.unpack("<I", hdr[4:8])[0]
+                if magic != _MAGIC:
+                    break
+                kb = f.read(klen)
+                vl = f.read(8)
+                if len(kb) < klen or len(vl) < 8:
+                    break
+                vlen = struct.unpack("<Q", vl)[0]
+                voff = pos + 8 + klen + 8
+                f.seek(vlen, os.SEEK_CUR)
+                pos = voff + vlen
+                if f.tell() != pos:
+                    break
+                self._index[kb.decode()] = (voff, vlen)
+                good_end = pos
+        if os.path.getsize(self.log_path) != good_end:
+            with open(self.log_path, "r+b") as f:  # drop torn tail
+                f.truncate(good_end)
+
+    def put(self, key: Key, value: bytes) -> None:
+        ks = _key_str(key).encode()
+        with self._lock:
+            self._fh.seek(0, os.SEEK_END)
+            pos = self._fh.tell()
+            self._fh.write(_MAGIC + struct.pack("<I", len(ks)) + ks
+                           + struct.pack("<Q", len(value)) + value)
+            self._index[ks.decode()] = (pos + 8 + len(ks) + 8, len(value))
+        self.stats.puts += 1
+        self.stats.bytes_written += len(value)
+
+    def get(self, key: Key) -> bytes:
+        off, length = self._index[_key_str(key)]
+        with self._lock:
+            self._fh.flush()
+            with open(self.log_path, "rb") as f:
+                f.seek(off)
+                v = f.read(length)
+        self.stats.gets += 1
+        self.stats.bytes_read += len(v)
+        return v
+
+    def delete(self, key: Key) -> None:
+        self._index.pop(_key_str(key), None)
+
+    def __contains__(self, key: Key) -> bool:
+        return _key_str(key) in self._index
+
+    def keys(self):
+        out = []
+        for ks in self._index:
+            p, d, c = ks.split("/", 2)
+            out.append((int(p), int(d), c))
+        return out
+
+    def flush(self) -> None:
+        with self._lock:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            tmp = self.index_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"index": {k: list(v) for k, v in self._index.items()},
+                           "log_end": os.path.getsize(self.log_path)}, f)
+            os.replace(tmp, self.index_path)  # atomic
+
+    def close(self) -> None:
+        self.flush()
+        self._fh.close()
+
+
+class PartitionedKV(KVStore):
+    """Routes by partition_id across per-unit backends (paper: one storage
+    instance per machine; all deltas have k partitions)."""
+
+    def __init__(self, parts: list[KVStore]) -> None:
+        super().__init__()
+        self.parts = parts
+
+    def _route(self, key: Key) -> KVStore:
+        return self.parts[key[0] % len(self.parts)]
+
+    def get(self, key: Key) -> bytes:
+        v = self._route(key).get(key)
+        self.stats.gets += 1
+        self.stats.bytes_read += len(v)
+        return v
+
+    def put(self, key: Key, value: bytes) -> None:
+        self._route(key).put(key, value)
+        self.stats.puts += 1
+        self.stats.bytes_written += len(value)
+
+    def delete(self, key: Key) -> None:
+        self._route(key).delete(key)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._route(key)
+
+    def keys(self):
+        out = []
+        for p in self.parts:
+            out.extend(p.keys())
+        return out
+
+    def flush(self) -> None:
+        for p in self.parts:
+            p.flush()
+
+    def close(self) -> None:
+        for p in self.parts:
+            p.close()

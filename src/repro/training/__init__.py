@@ -1,0 +1,2 @@
+from .optim import adafactor, adamw, sgd  # noqa: F401
+from .trainer import make_train_step  # noqa: F401

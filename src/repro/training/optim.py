@@ -1,0 +1,165 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+* :func:`adamw`     — bf16/f32 params with fp32 master + moments; the
+  default for ≤34B models.
+* :func:`adafactor` — factored second moment, no master copy; the only
+  arithmetically feasible choice for the 480B/671B MoEs on 16 GB v5e
+  (see DESIGN.md §5): state is ~2 fp32 vectors per matrix instead of
+  2 fp32 matrices + master.
+* :func:`sgd`       — momentum SGD (GNN/recsys configs).
+
+Each returns ``(init_fn, update_fn)``; ``update_fn(grads, state, params)
+→ (new_params, new_state)``.  Gradient clipping and the LR schedule are
+closed over.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def _clip(grads, max_norm):
+    if max_norm is None:
+        return grads
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        grads)
+
+
+def warmup_cosine(base_lr: float, warmup: int = 100, total: int = 10_000,
+                  min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * w * cos
+    return lr
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01,
+          clip_norm=1.0, schedule: Callable | None = None):
+    lr_fn = schedule or (lambda s: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "master": jax.tree.map(lambda p: p.astype(jnp.float32), params)}
+
+    def update(grads, state, params):
+        grads = _clip(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            new_master = master - lr_t * (u + weight_decay * master)
+            return m2, v2, new_master
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+        m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, {"step": step, "m": m, "v": v, "master": master}
+
+    return init, update
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_norm=1.0,
+              schedule: Callable | None = None):
+    """Factored second moment (Shazeer & Stern, arXiv:1804.04235), no
+    first moment, no master copy — O(n+m) state per n×m matrix."""
+    lr_fn = schedule or (lambda s: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        def fac(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "stats": jax.tree.map(fac, params)}
+
+    def update(grads, state, params):
+        grads = _clip(grads, clip_norm)
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** -decay
+        lr_t = lr_fn(step)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            if p.ndim >= 2:
+                vr = beta * st["vr"] + (1 - beta) * (g * g).mean(-1)
+                vc = beta * st["vc"] + (1 - beta) * (g * g).mean(-2)
+                rfac = jax.lax.rsqrt(vr / jnp.maximum(
+                    vr.mean(-1, keepdims=True), eps) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g * g
+                u = g * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (RMS ≤ 1) per the paper
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_st
+
+        is_st = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        out = jax.tree.map(upd, grads, state["stats"], params, is_leaf=None)
+        # out is a tree of (param, stats) tuples
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        stats = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "stats": stats}
+
+    return init, update
+
+
+def sgd(lr=1e-2, momentum=0.9, clip_norm=None,
+        schedule: Callable | None = None):
+    lr_fn = schedule or (lambda s: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params)}
+
+    def update(grads, state, params):
+        grads = _clip(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m2).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, grads, state["mom"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        mom = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "mom": mom}
+
+    return init, update
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}

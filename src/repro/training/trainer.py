@@ -1,0 +1,56 @@
+"""Generic train-step builder: value_and_grad → optimizer, with optional
+gradient accumulation and gradient compression for the DP all-reduce.
+
+The returned step is pure (params, opt_state, batch) → (params, opt_state,
+metrics) so it can be jitted with explicit in/out shardings by the
+launcher, lowered for the dry-run, and donated for real runs.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.compression import compress_tree, decompress_tree
+
+
+def make_train_step(loss_fn: Callable, optimizer: tuple[Callable, Callable],
+                    *, accum_steps: int = 1,
+                    grad_compression: str | None = None) -> Callable:
+    """``loss_fn(params, batch) -> (loss, metrics)``;
+    ``optimizer = (init_fn, update_fn)``."""
+    _, update_fn = optimizer
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g),), m
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            (grads,), metrics = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        if grad_compression is not None:
+            # quantize → (implicit DP all-reduce on use) → dequantize, with
+            # error feedback folded into the next step via stochastic round
+            packed = compress_tree(grads, kind=grad_compression)
+            grads = decompress_tree(packed, like=grads)
+        new_params, new_state = update_fn(grads, opt_state, params)
+        return new_params, new_state, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return step

@@ -1,0 +1,76 @@
+"""§5 analytical models validated against measured index sizes."""
+import numpy as np
+import pytest
+
+from repro.core import GraphManager, replay
+from repro.core.analysis import (Rates, balanced_level_space,
+                                 balanced_root_size, balanced_total_space,
+                                 choose_parameters, copylog_space,
+                                 estimate_rates, intersection_root_size)
+from repro.data.generators import churn_network, growing_network
+
+
+def test_balanced_level_space_matches_measured():
+    uni, ev = growing_network(n_events=3000, seed=4, n_attrs=0)
+    rates = estimate_rates(ev, g0=0)
+    assert rates.delta_star == pytest.approx(1.0)
+    gm = GraphManager(uni, ev, L=200, k=2, diff_fn="balanced")
+    stats = gm.dg.skeleton_stats()
+    meas = {l: b / 4 for l, b in
+            stats["struct_bytes_per_level_nocap"].items()}
+    pred = balanced_level_space(200, 2, rates)
+    for lvl, m in meas.items():
+        assert abs(m / pred - 1) < 0.05, (lvl, m, pred)
+    # "same at every level" — the §5.3 result
+    vals = list(meas.values())
+    assert max(vals) / min(vals) < 1.1
+
+
+def test_balanced_total_space():
+    uni, ev = growing_network(n_events=3000, seed=4, n_attrs=0)
+    rates = estimate_rates(ev, g0=0)
+    gm = GraphManager(uni, ev, L=200, k=2, diff_fn="balanced")
+    meas = sum(gm.dg.skeleton_stats()["struct_bytes_per_level_nocap"]
+               .values()) / 4
+    pred = balanced_total_space(200, 2, rates)
+    assert abs(meas / pred - 1) < 0.10  # ragged tail tolerance
+
+
+def test_balanced_root_size():
+    uni, ev = growing_network(n_events=2000, seed=6, n_attrs=0)
+    rates = estimate_rates(ev, g0=0)
+    gm = GraphManager(uni, ev, L=128, k=2, diff_fn="balanced")
+    from repro.core.query import NO_ATTRS
+    root = gm.dg.root_nids()[0]
+    st = gm.dg.execute(gm.dg.plan_node(root, NO_ATTRS), NO_ATTRS,
+                       gm.pool)[("node", root)]
+    meas = st.node_mask.sum() + st.edge_mask.sum()
+    pred = balanced_root_size(rates)
+    assert abs(meas / pred - 1) < 0.15
+
+
+def test_intersection_root_special_cases():
+    r = Rates(delta_star=0.5, rho_star=0.0, g0=1000, n_events=5000)
+    assert intersection_root_size(r) == 1000  # growing-only → G_0
+    r2 = Rates(delta_star=0.3, rho_star=0.3, g0=1000, n_events=5000)
+    assert intersection_root_size(r2) == pytest.approx(
+        1000 * np.exp(-5000 * 0.3 / 1000))
+    r3 = Rates(delta_star=0.4, rho_star=0.2, g0=1000, n_events=5000)
+    assert intersection_root_size(r3) == pytest.approx(
+        1000 * 1000 / (1000 + 0.2 * 5000))
+
+
+def test_choose_parameters():
+    rates = Rates(delta_star=0.6, rho_star=0.3, g0=500, n_events=100_000)
+    pick = choose_parameters(rates)
+    assert pick.k >= 2 and pick.L > 0
+    tight = choose_parameters(rates, space_budget_events=120_000)
+    assert tight.expected_space_events <= 120_000
+    with pytest.raises(ValueError):
+        choose_parameters(rates, space_budget_events=1,
+                          latency_budget_events=1)
+
+
+def test_copylog_space_larger_than_deltagraph():
+    rates = Rates(delta_star=0.9, rho_star=0.05, g0=0, n_events=50_000)
+    assert copylog_space(1000, rates) > balanced_total_space(1000, 2, rates)

@@ -1,0 +1,44 @@
+"""Interval tree / Copy+Log / Log baselines must agree with the oracle."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import CopyLogStore, IntervalTreeStore, LogStore
+from repro.core.events import replay
+from repro.data.generators import churn_network, growing_network
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("gen,seed", [(churn_network, 5), (growing_network, 7)])
+def test_interval_tree_matches_oracle(gen, seed):
+    if gen is churn_network:
+        uni, ev = gen(n_initial_edges=120, n_events=900, seed=seed)
+    else:
+        uni, ev = gen(n_events=900, seed=seed)
+    it = IntervalTreeStore(uni, ev)
+    tmax = int(ev.time[-1])
+    for t in [-1, 0, tmax] + [int(x) for x in RNG.integers(0, tmax, 10)]:
+        truth = replay(uni, ev, t)
+        got = it.get_snapshot(t)
+        assert np.array_equal(got.node_mask, truth.node_mask), t
+        assert np.array_equal(got.edge_mask, truth.edge_mask), t
+
+
+def test_copylog_matches_oracle(churn):
+    uni, ev = churn
+    cl = CopyLogStore(uni, ev, L=100)
+    tmax = int(ev.time[-1])
+    for t in [-1, 0, tmax] + [int(x) for x in RNG.integers(0, tmax, 10)]:
+        truth = replay(uni, ev, t)
+        got = cl.get_snapshot(t)
+        assert np.array_equal(got.node_mask, truth.node_mask), t
+        assert np.array_equal(got.edge_mask, truth.edge_mask), t
+
+
+def test_log_store(churn):
+    uni, ev = churn
+    lg = LogStore(uni, ev)
+    t = int(ev.time[500])
+    got = lg.get_snapshot(t)
+    truth = replay(uni, ev, t)
+    assert np.array_equal(got.edge_mask, truth.edge_mask)

@@ -1,0 +1,233 @@
+"""DeltaGraph end-to-end correctness vs the brute-force oracle —
+every differential function, arity, partitioning, materialization,
+incremental maintenance, multipoint plans, intervals, TimeExpressions."""
+import numpy as np
+import pytest
+
+from conftest import assert_state_equal
+from repro.core import GraphManager, replay
+from repro.core.deltagraph import DeltaGraph
+from repro.core.events import (EV_NEW_EDGE, EV_NEW_NODE, EV_TRANS_EDGE)
+from repro.core.query import NO_ATTRS, TimeExpression, parse_attr_options
+from repro.data.generators import churn_network, growing_network
+
+RNG = np.random.default_rng(7)
+
+
+def check_times(gm, uni, ev, n=6, opts_str="+node:all+edge:all"):
+    opts = parse_attr_options(opts_str, uni)
+    tmax = int(ev.time[-1])
+    for t in [-5, 0, tmax, tmax + 10] + [int(x) for x in
+                                         RNG.integers(0, tmax, n)]:
+        truth = replay(uni, ev, t)
+        got = gm.dg.get_snapshot(t, opts, pool=gm.pool)
+        assert_state_equal(got, truth, opts.wants_attrs, msg=f"t={t}")
+
+
+@pytest.mark.parametrize("diff,params", [
+    ("intersection", {}), ("union", {}), ("empty", {}), ("balanced", {}),
+    ("mixed", dict(r1=.8, r2=.3)), ("skewed", dict(r=.7)),
+    ("right_skewed", dict(r=.5)), ("left_skewed", dict(r=.5)),
+])
+def test_diff_functions(diff, params):
+    uni, ev = churn_network(n_initial_edges=120, n_events=800, seed=3)
+    gm = GraphManager(uni, ev, L=64, k=2, diff_fn=diff, diff_params=params)
+    check_times(gm, uni, ev, n=4)
+
+
+@pytest.mark.parametrize("k", [2, 3, 5])
+@pytest.mark.parametrize("P", [1, 4])
+def test_arity_and_partitions(k, P):
+    uni, ev = churn_network(n_initial_edges=100, n_events=600, seed=5)
+    gm = GraphManager(uni, ev, L=50, k=k, num_partitions=P)
+    check_times(gm, uni, ev, n=3)
+
+
+def test_mod_hash_partitioner():
+    uni, ev = churn_network(n_initial_edges=100, n_events=500, seed=9)
+    gm = GraphManager(uni, ev, L=50, k=3, num_partitions=3,
+                      partition_fn="mod_hash")
+    check_times(gm, uni, ev, n=3)
+
+
+def test_structure_only_and_columnar(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=3)
+    check_times(gm, uni, ev, n=3, opts_str="")
+    # per-column retrieval fetches exactly that column
+    opts = parse_attr_options("+node:attr1", uni)
+    t = int(ev.time[len(ev) // 2])
+    truth = replay(uni, ev, t)
+    got = gm.dg.get_snapshot(t, opts, pool=gm.pool)
+    c1 = uni.attr_col("node", "attr1")
+    tv = np.where(truth.node_mask, truth.node_attrs[:, c1], np.nan)
+    gv = np.where(got.node_mask, got.node_attrs[:, c1], np.nan)
+    assert np.array_equal(tv, gv, equal_nan=True)
+
+
+def test_columnar_fetches_fewer_bytes(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=3)
+    t = int(ev.time[700])
+    gm.store.stats.reset()
+    gm.dg.get_snapshot(t, NO_ATTRS, pool=gm.pool)
+    struct_bytes = gm.store.stats.bytes_read
+    gm.store.stats.reset()
+    gm.dg.get_snapshot(t, parse_attr_options("+node:all+edge:all", uni),
+                       pool=gm.pool)
+    all_bytes = gm.store.stats.bytes_read
+    assert struct_bytes < all_bytes
+
+
+def test_multipoint_matches_singlepoint(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=64, k=2)
+    times = [int(ev.time[i]) for i in (50, 300, 301, 600, 900, 1100)]
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    multi = gm.dg.get_snapshots(times, opts, pool=gm.pool)
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert_state_equal(multi[t], truth, msg=f"multi t={t}")
+
+
+def test_multipoint_cheaper_than_singlepoints(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=50, k=2)
+    times = [int(t) for t in np.linspace(ev.time[10], ev.time[-10], 12)]
+    plan_m = gm.dg.plan_multipoint(times, NO_ATTRS)
+    total_single = sum(gm.dg.plan_singlepoint(t, NO_ATTRS).total_weight
+                       for t in times)
+    assert plan_m.total_weight < total_single
+
+
+def test_materialization(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=64, k=2)
+    w_before = gm.dg.plan_singlepoint(int(ev.time[100]), NO_ATTRS).total_weight
+    gm.materialize_roots(depth=2)
+    w_after = gm.dg.plan_singlepoint(int(ev.time[100]), NO_ATTRS).total_weight
+    assert w_after < w_before  # zero-weight shortcut is used
+    check_times(gm, uni, ev, n=4)
+
+
+def test_total_materialization(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=64, k=2)
+    gm.total_materialization()
+    check_times(gm, uni, ev, n=4)
+
+
+def test_materialize_with_attrs_is_source(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=64, k=2)
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    root = gm.dg.root_nids()[0]
+    gm.dg.materialize(root, gm.pool, opts)
+    check_times(gm, uni, ev, n=4)
+
+
+def test_unmaterialize(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=64, k=2)
+    root = gm.dg.root_nids()[0]
+    gm.dg.materialize(root, gm.pool)
+    gm.dg.unmaterialize(root, gm.pool)
+    assert gm.dg.nodes[root].materialized_as is None
+    check_times(gm, uni, ev, n=3)
+
+
+def test_incremental_appends():
+    uni, ev = churn_network(n_initial_edges=100, n_events=1000, seed=17)
+    half = len(ev) // 2
+    gm = GraphManager(uni, ev[:half], L=64, k=3)
+    for i in range(half, len(ev), 37):
+        gm.update(ev[i:i + 37])
+    check_times(gm, uni, ev, n=5)
+
+
+def test_current_graph_used_for_recent_queries():
+    uni, ev = churn_network(n_initial_edges=100, n_events=600, seed=19)
+    gm = GraphManager(uni, ev, L=100, k=2)
+    t = int(ev.time[-1])
+    plan = gm.dg.plan_singlepoint(t, NO_ATTRS, use_current=True)
+    assert plan.steps[0].action[0] == "current"
+
+
+def test_interval_and_transients():
+    uni, ev = churn_network(n_initial_edges=80, n_events=600, seed=19,
+                            p_transient=0.1)
+    gm = GraphManager(uni, ev, L=50, k=2)
+    ts, te = int(ev.time[100]), int(ev.time[450])
+    res = gm.get_hist_graph_interval(ts, te)
+    m = (ev.time >= ts) & (ev.time < te)
+    exp_n = np.unique(ev.slot[m & (ev.etype == EV_NEW_NODE)]).astype(np.int32)
+    exp_e = np.unique(ev.slot[m & (ev.etype == EV_NEW_EDGE)]).astype(np.int32)
+    exp_t = ev.slot[m & (ev.etype == EV_TRANS_EDGE)]
+    assert np.array_equal(res["node_added"], exp_n)
+    assert np.array_equal(res["edge_added"], exp_e)
+    assert np.array_equal(np.sort(res["transient_slot"]), np.sort(exp_t))
+
+
+def test_time_expression():
+    uni, ev = churn_network(n_initial_edges=100, n_events=500, seed=23)
+    gm = GraphManager(uni, ev, L=50, k=2)
+    t1, t2 = int(ev.time[150]), int(ev.time[350])
+    tex = TimeExpression.parse("t0 & ~t1", [t1, t2])
+    st = gm.get_hist_graph_expr(tex)
+    tr1, tr2 = replay(uni, ev, t1), replay(uni, ev, t2)
+    assert np.array_equal(st.edge_mask, tr1.edge_mask & ~tr2.edge_mask)
+    assert np.array_equal(st.node_mask, tr1.node_mask & ~tr2.node_mask)
+
+
+def test_multi_hierarchy():
+    uni, ev = churn_network(n_initial_edges=100, n_events=600, seed=29)
+    gm = GraphManager(uni, ev, L=50, k=2, diff_fn=["intersection", "union"])
+    check_times(gm, uni, ev, n=4)
+
+
+def test_skeleton_save_load():
+    uni, ev = churn_network(n_initial_edges=100, n_events=600, seed=31)
+    gm = GraphManager(uni, ev, L=50, k=2)
+    gm.dg.save_skeleton()
+    dg2 = DeltaGraph.load_skeleton(uni, gm.store)
+    dg2.recent = gm.dg.recent
+    dg2._last_leaf_state = gm.dg._last_leaf_state
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    for t in (int(ev.time[100]), int(ev.time[-1])):
+        truth = replay(uni, ev, t)
+        got = dg2.get_snapshot(t, opts)
+        assert truth.equal(got)
+
+
+def test_growing_only_intersection_root_is_g0(growing):
+    """§5.2: for a strictly growing graph the Intersection root = G_0."""
+    uni, ev = growing
+    gm = GraphManager(uni, ev, L=100, k=2, diff_fn="intersection")
+    root = gm.dg.root_nids()[0]
+    plan = gm.dg.plan_node(root, NO_ATTRS)
+    st = gm.dg.execute(plan, NO_ATTRS, gm.pool)[("node", root)]
+    # G_0 here is the empty graph (the trace starts from nothing)
+    assert st.node_mask.sum() == 0 and st.edge_mask.sum() == 0
+
+
+def test_live_update_grows_universe():
+    """§6: updates that introduce NEW nodes/edges (universe growth)."""
+    from repro.core.events import GraphHistoryBuilder
+    b = GraphHistoryBuilder()
+    for i in range(6):
+        b.add_node(i, t=i)
+    for i in range(5):
+        b.add_edge(i, i + 1, t=10 + i, edge_id=("e", i))
+    uni, ev = b.finalize()
+    gm = GraphManager(uni, ev, L=4, k=2)
+    upd = GraphHistoryBuilder()
+    upd.universe = uni
+    upd._seq = 10_000
+    upd.add_node("new", 100)
+    upd.add_edge("new", 0, 101, edge_id=("e", "new"))
+    _, ev2 = upd.finalize()
+    gm.update(ev2)
+    h = gm.get_hist_graph(101)
+    assert h.num_nodes() == 7 and h.num_edges() == 6
+    h_old = gm.get_hist_graph(12)
+    assert h_old.num_nodes() == 6 and h_old.num_edges() == 3

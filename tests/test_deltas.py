@@ -1,0 +1,62 @@
+"""Delta algebra laws (symmetric canonical attr rows, invertibility)."""
+import numpy as np
+
+from repro.core.deltas import apply_delta, eventlist_to_delta, state_diff
+from repro.core.events import replay
+from repro.data.generators import churn_network, random_history
+
+
+def canonical_equal(a, b):
+    if not (np.array_equal(a.node_mask, b.node_mask)
+            and np.array_equal(a.edge_mask, b.edge_mask)):
+        return False
+    return a.equal(b)
+
+
+def test_diff_then_apply_roundtrip(churn):
+    uni, ev = churn
+    t1, t2 = int(ev.time[200]), int(ev.time[800])
+    s1, s2 = replay(uni, ev, t1), replay(uni, ev, t2)
+    d = state_diff(s2, s1)
+    got = apply_delta(s1, d, forward=True)
+    assert canonical_equal(got, s2)
+
+
+def test_delta_inverse(churn):
+    uni, ev = churn
+    t1, t2 = int(ev.time[300]), int(ev.time[900])
+    s1, s2 = replay(uni, ev, t1), replay(uni, ev, t2)
+    d = state_diff(s2, s1)
+    back = apply_delta(s2, d, forward=False)
+    assert canonical_equal(back, s1)
+
+
+def test_delta_composition(churn):
+    """Δ(c,b)∘Δ(b,a) applied in sequence equals Δ(c,a) applied once."""
+    uni, ev = churn
+    ts = [int(ev.time[i]) for i in (100, 500, 1000)]
+    a, b, c = (replay(uni, ev, t) for t in ts)
+    d_ab, d_bc, d_ac = state_diff(b, a), state_diff(c, b), state_diff(c, a)
+    via_two = apply_delta(apply_delta(a, d_ab), d_bc)
+    via_one = apply_delta(a, d_ac)
+    assert canonical_equal(via_two, via_one)
+
+
+def test_eventlist_to_delta(churn):
+    uni, ev = churn
+    t1 = int(ev.time[400])
+    hi = ev.search_time(t1)
+    s0 = replay(uni, ev, int(ev.time[0]) - 1)
+    d = eventlist_to_delta(ev[:hi])
+    got = apply_delta(s0, d)
+    truth = replay(uni, ev, t1)
+    assert np.array_equal(got.node_mask, truth.node_mask)
+    assert np.array_equal(got.edge_mask, truth.edge_mask)
+
+
+def test_empty_delta_is_identity(churn):
+    uni, ev = churn
+    s = replay(uni, ev, int(ev.time[600]))
+    d = state_diff(s, s)
+    assert d.struct_count() == 0 and len(d.node_attr) == 0
+    assert canonical_equal(apply_delta(s, d), s)

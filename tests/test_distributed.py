@@ -1,0 +1,136 @@
+"""Distributed semantics, run in subprocesses with 8 virtual devices
+(XLA_FLAGS must be set before jax init, so each case is its own process).
+
+* sharded retrieval == oracle, and its HLO contains **zero collectives**
+  (the paper's 'no network communication during retrieval');
+* elastic replan keeps all partitions served after a worker死;
+* straggler mitigation finishes with bounded duplicate work.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_retrieval_correct_and_collective_free():
+    out = run_sub("""
+        import numpy as np, jax
+        from repro.core import GraphManager, replay
+        from repro.data.generators import churn_network
+        from repro.runtime.jax_exec import (execute_singlepoint_sharded,
+                                            lowered_retrieval_hlo)
+        uni, ev = churn_network(n_initial_edges=150, n_events=900, seed=43)
+        gm = GraphManager(uni, ev, L=80, k=2, num_partitions=8,
+                          partition_fn="word_cyclic")
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(2)
+        for t in rng.integers(0, int(ev.time[-1]) + 3, 5):
+            t = int(t)
+            truth = replay(uni, ev, t)
+            nm, em = execute_singlepoint_sharded(gm.dg, t, mesh, pool=gm.pool)
+            assert np.array_equal(nm, truth.node_mask), t
+            assert np.array_equal(em, truth.edge_mask), t
+        hlo = lowered_retrieval_hlo(mesh, K=5, Wp=64)
+        bad = [w for w in ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute") if w in hlo]
+        assert not bad, bad
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_multi_device_train_step_runs():
+    """A reduced LM train step actually executes SPMD on 8 devices."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.registry import reduced_config
+        from repro.models import common as mc
+        from repro.models.transformer import model as tm
+        from repro.training.optim import OPTIMIZERS
+        from repro.training.trainer import make_train_step
+        cfg = reduced_config("yi-34b")
+        params = mc.init_params(tm.param_defs(cfg), jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        tokens = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab, (8, 16)), jnp.int32)
+        opt = OPTIMIZERS["adamw"](lr=1e-3)
+        state = opt[0](params)
+        step = make_train_step(lambda p, b: tm.loss_fn(p, b, cfg), opt)
+        with jax.set_mesh(mesh):
+            tok_sh = jax.device_put(tokens, NamedSharding(mesh, P("data", None)))
+            p2, s2, m = jax.jit(step)(params, state, {"tokens": tok_sh})
+        assert np.isfinite(float(m["loss"]))
+        print("OK", float(m["loss"]))
+    """)
+    assert "OK" in out
+
+
+def test_elastic_replan():
+    from repro.runtime.fault import elastic_replan
+    before = elastic_replan(16, ["w0", "w1", "w2", "w3"])
+    after = elastic_replan(16, ["w0", "w1", "w3"])  # w2 died
+    assert set(after.values()) <= {"w0", "w1", "w3"}
+    assert set(after.keys()) == set(range(16))
+    moved = sum(1 for p in before
+                if before[p] != after[p] and before[p] != "w2")
+    # consistent hashing: partitions not owned by the dead worker rarely move
+    assert moved <= 4
+
+
+def test_heartbeat_and_straggler():
+    from repro.runtime.fault import (FetchTask, HeartbeatTracker,
+                                     StragglerMitigator)
+    clock = [0.0]
+    hb = HeartbeatTracker(["a", "b"], timeout=5, clock=lambda: clock[0])
+    clock[0] = 3.0
+    hb.beat("a")
+    clock[0] = 7.0
+    assert hb.dead() == ["b"] and hb.alive() == ["a"]
+
+    tasks = [FetchTask(p, f"k{p}_{i}", size_est=100 * (p + 1))
+             for p in range(4) for i in range(5)]
+    sm = StragglerMitigator(tasks, hedge_frac=0.2)
+    assigned = []
+    while True:
+        t = sm.assign()
+        if t is None:
+            break
+        assigned.append(t.key)
+        sm.complete(t.key)
+        if sm.finished():
+            break
+    assert sm.finished()
+    assert len(set(assigned)) == len(tasks)
+    # first assignment comes from the largest-deficit partition (p=3)
+    assert assigned[0].startswith("k3_")
+
+
+def test_gradient_compression_roundtrip():
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.runtime.compression import compress_tree, decompress_tree
+    g = {"a": jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)),
+                          jnp.float32) * 1e-3}
+    for kind in ("bf16", "int8"):
+        packed = compress_tree(g, kind=kind)
+        out = decompress_tree(packed, like=g)
+        err = float(jnp.abs(out["a"] - g["a"]).max()
+                    / (jnp.abs(g["a"]).max() + 1e-12))
+        assert err < 0.05, (kind, err)

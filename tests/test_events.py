@@ -1,0 +1,74 @@
+"""Event model + oracle semantics (paper §3.1)."""
+import numpy as np
+import pytest
+
+from repro.core.events import (EV_NEW_EDGE, EV_NEW_NODE, EventList,
+                               GraphHistoryBuilder, MaterializedState,
+                               apply_events, replay)
+
+
+def build_tiny():
+    b = GraphHistoryBuilder()
+    b.add_node("a", 1, attrs={"w": 1.0})
+    b.add_node("b", 2)
+    b.add_edge("a", "b", 3, edge_id="e1")
+    b.set_node_attr("a", "w", 2.0, 4)
+    b.delete_edge("a", "b", 5)
+    b.add_edge("a", "b", 6, edge_id="e2")
+    b.transient_edge("a", "b", 7)
+    return b.finalize()
+
+
+def test_builder_and_replay():
+    uni, ev = build_tiny()
+    assert uni.num_nodes == 2
+    assert uni.num_edges == 3  # e1, e2, transient
+    s3 = replay(uni, ev, 3)
+    assert s3.node_mask.sum() == 2 and s3.edge_mask.sum() == 1
+    s5 = replay(uni, ev, 5)
+    assert s5.edge_mask.sum() == 0  # deletion effective at its timestamp
+    s6 = replay(uni, ev, 6)
+    assert s6.edge_mask.sum() == 1
+    assert s6.edge_mask[uni.edge_slot("e2")]
+    s7 = replay(uni, ev, 7)
+    assert s7.edge_mask.sum() == 1  # transient edges never in snapshots
+
+
+def test_attr_old_values_recorded():
+    uni, ev = build_tiny()
+    s4 = replay(uni, ev, 4)
+    col = uni.attr_col("node", "w")
+    assert s4.node_attrs[uni.node_slot("a"), col] == 2.0
+    s3 = replay(uni, ev, 3)
+    assert s3.node_attrs[uni.node_slot("a"), col] == 1.0
+
+
+def test_bidirectional_event_application():
+    """G_{k-1} = G_k - E (paper §3.1)."""
+    uni, ev = build_tiny()
+    full = replay(uni, ev, 100)
+    # walk back to t=3 by applying the tail backward
+    hi = ev.search_time(3)
+    back = apply_events(full, ev[hi:], forward=False)
+    truth = replay(uni, ev, 3)
+    assert np.array_equal(back.node_mask, truth.node_mask)
+    assert np.array_equal(back.edge_mask, truth.edge_mask)
+
+
+def test_ids_never_reused():
+    uni, ev = build_tiny()
+    assert uni.edge_slot("e1") != uni.edge_slot("e2")
+
+
+def test_eventlist_concat_slice():
+    uni, ev = build_tiny()
+    parts = EventList.concat([ev[:3], ev[3:]])
+    assert len(parts) == len(ev)
+    assert np.array_equal(parts.time, ev.time)
+
+
+def test_duplicate_node_add_raises():
+    b = GraphHistoryBuilder()
+    b.add_node("x", 1)
+    with pytest.raises(ValueError):
+        b.add_node("x", 2)

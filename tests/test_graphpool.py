@@ -1,0 +1,110 @@
+"""GraphPool overlay semantics: bit pairs, dependency optimization,
+cleanup, memory accounting (paper §6)."""
+import numpy as np
+
+from repro.core import GraphManager, GraphPool, replay
+from repro.data.generators import churn_network
+
+
+def test_overlay_and_masks(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    times = [int(ev.time[i]) for i in (100, 400, 800, 1100)]
+    hs = gm.get_hist_graphs(times, "+node:all")
+    for h in hs:
+        truth = replay(uni, ev, h.time)
+        assert np.array_equal(h.node_mask, truth.node_mask)
+        assert np.array_equal(h.edge_mask, truth.edge_mask)
+
+
+def test_dependency_bit_pairs(churn):
+    """A snapshot close to a materialized graph stores only the diff."""
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    t = int(ev.time[-1])
+    h = gm.get_hist_graph(t)  # ≈ current graph → should depend on it
+    entry = gm.pool.table[h.gid]
+    assert entry.dep_gid is not None
+    truth = replay(uni, ev, t)
+    assert np.array_equal(h.node_mask, truth.node_mask)
+
+
+def test_dependency_survives_parent_release(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    root = gm.dg.root_nids()[0]
+    gid_m = gm.dg.materialize(root, gm.pool)
+    t = int(ev.time[600])
+    h = gm.get_hist_graph(t)
+    truth = replay(uni, ev, t)
+    gm.pool.release(gid_m)       # parent goes away → child must un-depend
+    gm.pool.cleaner(force=True)
+    assert np.array_equal(h.node_mask, truth.node_mask)
+    assert np.array_equal(h.edge_mask, truth.edge_mask)
+
+
+def test_cleanup_recycles_bits(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    before = gm.pool.node_planes.shape[0]
+    hs = gm.get_hist_graphs([int(ev.time[i]) for i in (100, 300, 500)])
+    for h in hs:
+        h.close()
+    gm.pool.cleaner(force=True)
+    assert gm.pool.num_active() == 1  # just the current graph
+    free = len(gm.pool._free_bits)
+    hs2 = gm.get_hist_graphs([int(ev.time[i]) for i in (200, 600)])
+    assert len(gm.pool._free_bits) >= free - 4  # recycled, not regrown
+
+
+def test_memory_smaller_than_disjoint(churn):
+    """fig 8a: overlaying beats keeping each snapshot as its own in-memory
+    graph (the paper's 600 MB vs 50 GB at scale; here: byte masks)."""
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    times = [int(t) for t in np.linspace(ev.time[10], ev.time[-1], 20)]
+    hs = gm.get_hist_graphs(times)
+    pool_bytes = gm.pool.memory_bytes()
+    disjoint = sum(replay(uni, ev, t).node_mask.size
+                   + replay(uni, ev, t).edge_mask.size for t in times)
+    assert pool_bytes < disjoint
+
+
+def test_union_masks(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    t1, t2 = int(ev.time[200]), int(ev.time[900])
+    h1, h2 = gm.get_hist_graphs([t1, t2])
+    un, ue = gm.pool.union_masks()
+    from repro.core import bitmaps as bm
+    u_edges = bm.np_unpack(ue, uni.num_edges)
+    exp = (replay(uni, ev, t1).edge_mask | replay(uni, ev, t2).edge_mask
+           | gm.pool.get_edge_mask(0))
+    assert np.array_equal(u_edges, exp)
+
+
+def test_hist_graph_api(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    h = gm.get_hist_graph(int(ev.time[800]), "+node:attr0")
+    nodes = h.get_nodes()
+    assert len(nodes) == h.num_nodes()
+    if nodes:
+        nb = h.get_neighbors(nodes[0])
+        for v in nb:
+            assert h.get_edge_obj(nodes[0], v) is not None
+        val = h.node_attr(nodes[0], "attr0")
+        assert np.isnan(val) or np.isfinite(val)
+
+
+def test_update_current_marks_recently_deleted(churn):
+    uni, ev = churn
+    half = len(ev) - 50
+    gm = GraphManager(uni, ev[:half], L=10_000, k=2)  # all recent
+    before_e = gm.pool.get_edge_mask(0).copy()
+    gm.update(ev[half:])
+    after_e = gm.pool.get_edge_mask(0)
+    deleted = before_e & ~after_e
+    from repro.core import bitmaps as bm
+    marked = bm.np_unpack(gm.pool.edge_planes[1], uni.num_edges)
+    assert np.all(marked[deleted])

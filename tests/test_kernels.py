@@ -1,0 +1,85 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref oracle."""
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from repro.kernels import attention, bucket_edges, delta_apply_chain, segment_sum
+from repro.kernels.delta_apply.delta_apply import delta_apply_chain_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("W", [1, 7, 128, 1000])
+@pytest.mark.parametrize("K", [0, 1, 3, 6])
+def test_delta_apply_sweep(W, K):
+    base = RNG.integers(0, 2 ** 32, W, dtype=np.uint32)
+    adds = RNG.integers(0, 2 ** 32, (K, W), dtype=np.uint32)
+    dels = RNG.integers(0, 2 ** 32, (K, W), dtype=np.uint32)
+    ref = delta_apply_chain(jnp.array(base), jnp.array(adds), jnp.array(dels))
+    got = delta_apply_chain_pallas(jnp.array(base), jnp.array(adds),
+                                   jnp.array(dels), block_w=256)
+    assert np.array_equal(np.asarray(ref), np.asarray(got))
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, Hq, Hkv, Sq, Sk, D, Dv, causal, window, q_off)
+    (2, 4, 2, 16, 16, 32, 32, True, None, 0),
+    (1, 4, 4, 33, 33, 16, 16, True, None, 0),
+    (1, 8, 1, 8, 64, 32, 32, True, None, 56),
+    (2, 4, 2, 32, 32, 32, 32, True, 8, 0),
+    (1, 2, 2, 16, 48, 16, 16, False, None, 0),
+    (1, 4, 4, 16, 16, 24, 8, True, None, 0),   # MLA-style Dv != D
+])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_attention_sweep(shape, dtype):
+    B, Hq, Hkv, Sq, Sk, D, Dv, causal, window, qoff = shape
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    q = jnp.asarray(RNG.standard_normal((B, Hq, Sq, D)), dt)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, Sk, D)), dt)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, Sk, Dv)), dt)
+    ref = np.asarray(attention_ref(q, k, v, causal=causal, window=window,
+                                   q_offset=qoff), np.float32)
+    tol = 2e-2 if dtype == "bfloat16" else 3e-5
+    for impl in ("xla", "pallas"):
+        got = np.asarray(attention(q, k, v, causal=causal, window=window,
+                                   q_offset=qoff, impl=impl, block_k=16),
+                         np.float32)
+        assert_allclose(got, ref, rtol=tol, atol=tol, err_msg=f"{impl}")
+
+
+@pytest.mark.parametrize("E,N,D,bn", [(100, 37, 8, 16), (1000, 200, 16, 128),
+                                      (5, 3, 4, 8), (64, 64, 1, 8)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_segment_sum_sweep(E, N, D, bn, dtype):
+    ids = RNG.integers(0, N, E)
+    data = jnp.asarray(RNG.standard_normal((E, D)), dtype)
+    ref = segment_sum(data, ids, N, impl="xla")
+    got = segment_sum(data, ids, N, impl="pallas", block_n=bn)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_segment_sum_precomputed_buckets():
+    E, N, D, bn = 200, 50, 8, 16
+    ids = RNG.integers(0, N, E)
+    buckets = bucket_edges(ids, N, bn)
+    data = jnp.asarray(RNG.standard_normal((E, D)), np.float32)
+    ref = segment_sum(data, ids, N, impl="xla")
+    got = segment_sum(data, ids, N, impl="pallas", block_n=bn,
+                      buckets=buckets)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)
+
+
+def test_attention_decode_equals_prefill_row():
+    """Decode (Sq=1, q_offset=i) must equal row i of the full attention."""
+    B, H, S, D = 1, 2, 24, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    full = np.asarray(attention(q, k, v, causal=True, impl="xla"))
+    for i in (0, 7, 23):
+        row = np.asarray(attention(q[:, :, i:i + 1], k, v, causal=True,
+                                   q_offset=i, impl="xla"))
+        assert_allclose(row[:, :, 0], full[:, :, i], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,168 @@
+"""Assigned-architecture smoke tests (assignment requirement):
+reduced config of the same family, one forward/train step on CPU,
+asserting output shapes + no NaNs.  Plus prefill/decode consistency for
+the LM family and learning checks for GNN/recsys."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, family_of, reduced_config
+from repro.models import common as mc
+from repro.models.gnn import gnn_forward, gnn_loss, gnn_param_defs
+from repro.models.recsys.din import (din_forward, din_loss, din_param_defs,
+                                     din_retrieval)
+from repro.models.transformer import model as tm
+from repro.training.optim import OPTIMIZERS
+from repro.training.trainer import make_train_step
+
+RNG = np.random.default_rng(0)
+KEY = jax.random.PRNGKey(0)
+
+LM = [a for a in ARCH_IDS if family_of(a) == "lm"]
+GNN = [a for a in ARCH_IDS if family_of(a) == "gnn"]
+
+
+def rand_graph(N, E):
+    src = RNG.integers(0, N, E // 2).astype(np.int32)
+    dst = RNG.integers(0, N, E // 2).astype(np.int32)
+    return jnp.array(np.stack([np.concatenate([src, dst]),
+                               np.concatenate([dst, src])]))
+
+
+@pytest.mark.parametrize("arch", LM)
+def test_lm_smoke(arch):
+    cfg = reduced_config(arch)
+    params = mc.init_params(tm.param_defs(cfg), KEY)
+    B, S = 2, 16
+    tokens = jnp.array(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    opt_name = "adafactor" if cfg.moe else "adamw"
+    opt = OPTIMIZERS[opt_name](lr=1e-3)
+    state = opt[0](params)
+    step = jax.jit(make_train_step(lambda p, b: tm.loss_fn(p, b, cfg), opt))
+    p2, s2, m = step(params, state, {"tokens": tokens})
+    assert np.isfinite(float(m["loss"]))
+    logits, _, _, _ = jax.jit(lambda p, t: tm.forward(p, t, cfg))(params, tokens)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", LM)
+def test_lm_prefill_decode_consistency(arch):
+    cfg = reduced_config(arch)
+    params = mc.init_params(tm.param_defs(cfg), KEY)
+    B, S = 2, 12
+    tokens = jnp.array(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    last, _ = jax.jit(lambda p, t: tm.prefill_step(p, t, cfg))(params, tokens)
+    cache = tm.init_cache(cfg, B, S + 2)
+    dec = jax.jit(lambda p, c, t, l: tm.decode_step(p, c, t, l, cfg))
+    lg = None
+    for i in range(S):
+        lg, cache = dec(params, cache, tokens[:, i:i + 1], jnp.int32(i))
+    a, b = np.asarray(lg, np.float32), np.asarray(last, np.float32)
+    err = np.abs(a - b).max() / (np.abs(b).max() + 1e-6)
+    assert err < 5e-2, err
+
+
+def test_grad_accumulation_consistency():
+    """accum_steps=2 ≈ full-batch step (bf16 tolerance)."""
+    cfg = reduced_config("yi-34b")
+    params = mc.init_params(tm.param_defs(cfg), KEY)
+    tokens = jnp.array(RNG.integers(0, cfg.vocab, (4, 8)), jnp.int32)
+    opt = OPTIMIZERS["sgd"](lr=1e-2, momentum=0.0)
+    state = opt[0](params)
+    s1 = jax.jit(make_train_step(lambda p, b: tm.loss_fn(p, b, cfg), opt))
+    s2 = jax.jit(make_train_step(lambda p, b: tm.loss_fn(p, b, cfg), opt,
+                                 accum_steps=2))
+    p1, _, _ = s1(params, state, {"tokens": tokens})
+    p2, _, _ = s2(params, state, {"tokens": tokens})
+    d1 = np.asarray(p1["final_norm"], np.float32)
+    d2 = np.asarray(p2["final_norm"], np.float32)
+    np.testing.assert_allclose(d1, d2, rtol=0.1, atol=1e-2)
+
+
+@pytest.mark.parametrize("arch", GNN)
+def test_gnn_smoke(arch):
+    cfg = reduced_config(arch)
+    N, E = 48, 160
+    ei = rand_graph(N, E)
+    if cfg.kind in ("gcn", "gin"):
+        batch = {"x": jnp.asarray(RNG.standard_normal((N, cfg.d_in)), jnp.float32),
+                 "edge_index": ei,
+                 "labels": jnp.asarray(RNG.integers(0, cfg.n_classes, N), jnp.int32),
+                 "label_mask": jnp.ones(N, jnp.float32)}
+        out_shape = (N, cfg.n_classes)
+    elif cfg.kind == "meshgraphnet":
+        batch = {"x": jnp.asarray(RNG.standard_normal((N, cfg.d_node_in)), jnp.float32),
+                 "edge_attr": jnp.asarray(RNG.standard_normal((E, cfg.d_edge_in)), jnp.float32),
+                 "edge_index": ei,
+                 "target": jnp.asarray(RNG.standard_normal((N, cfg.d_out)), jnp.float32)}
+        out_shape = (N, cfg.d_out)
+    else:
+        T = 4 * E
+        batch = {"z": jnp.asarray(RNG.integers(1, 10, N), jnp.int32),
+                 "pos": jnp.asarray(RNG.standard_normal((N, 3)), jnp.float32),
+                 "edge_index": ei,
+                 "triplet_kj": jnp.asarray(RNG.integers(0, E, T), jnp.int32),
+                 "triplet_ji": jnp.asarray(RNG.integers(0, E, T), jnp.int32),
+                 "graph_ids": jnp.zeros(N, jnp.int32),
+                 "target": jnp.asarray(RNG.standard_normal((1, cfg.d_out)), jnp.float32)}
+        out_shape = (1, cfg.d_out)
+    params = mc.init_params(gnn_param_defs(cfg), KEY)
+    out = jax.jit(lambda p, b: gnn_forward(p, b, cfg))(params, batch)
+    assert out.shape == out_shape
+    assert np.all(np.isfinite(np.asarray(out)))
+    lr = 3e-4 if cfg.kind == "dimenet" else 1e-3  # dimenet energies start huge
+    opt = OPTIMIZERS["adamw"](lr=lr)
+    state = opt[0](params)
+    step = jax.jit(make_train_step(lambda p, b: gnn_loss(p, b, cfg), opt))
+    losses = []
+    for _ in range(8):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    assert min(losses[1:]) < losses[0]
+
+
+def test_din_smoke():
+    cfg = reduced_config("din")
+    params = mc.init_params(din_param_defs(cfg), KEY)
+    B, S = 16, cfg.seq_len
+    batch = {"hist_goods": jnp.asarray(RNG.integers(0, cfg.n_goods, (B, S)), jnp.int32),
+             "hist_cates": jnp.asarray(RNG.integers(0, cfg.n_cates, (B, S)), jnp.int32),
+             "hist_mask": jnp.asarray(RNG.random((B, S)) < 0.8),
+             "target_goods": jnp.asarray(RNG.integers(0, cfg.n_goods, B), jnp.int32),
+             "target_cates": jnp.asarray(RNG.integers(0, cfg.n_cates, B), jnp.int32),
+             "labels": jnp.asarray(RNG.integers(0, 2, B), jnp.int32)}
+    logit = jax.jit(lambda p, b: din_forward(p, b, cfg))(params, batch)
+    assert logit.shape == (B,) and np.all(np.isfinite(np.asarray(logit)))
+    opt = OPTIMIZERS["adamw"](lr=1e-2)
+    state = opt[0](params)
+    step = jax.jit(make_train_step(lambda p, b: din_loss(p, b, cfg), opt))
+    losses = []
+    for _ in range(6):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    rb = {k: v for k, v in batch.items() if k.startswith("hist")}
+    rb["cand_goods"] = jnp.asarray(RNG.integers(0, cfg.n_goods, (B, 64)), jnp.int32)
+    rb["cand_cates"] = jnp.asarray(RNG.integers(0, cfg.n_cates, (B, 64)), jnp.int32)
+    scores = jax.jit(lambda p, b: din_retrieval(p, b, cfg))(params, rb)
+    assert scores.shape == (B, 64)
+
+
+def test_embedding_bag_matches_manual():
+    from repro.models.recsys.embedding import embedding_bag
+    table = jnp.asarray(RNG.standard_normal((20, 4)), jnp.float32)
+    idx = jnp.asarray([[1, 3, -1], [0, -1, -1]], jnp.int32)
+    out = embedding_bag(table, idx, mode="sum")
+    exp0 = np.asarray(table)[1] + np.asarray(table)[3]
+    np.testing.assert_allclose(np.asarray(out[0]), exp0, rtol=1e-6)
+    out_m = embedding_bag(table, idx, mode="mean")
+    np.testing.assert_allclose(np.asarray(out_m[0]), exp0 / 2, rtol=1e-6)
+    # ragged form
+    flat = jnp.asarray([1, 3, 0], jnp.int32)
+    offs = jnp.asarray([0, 2], jnp.int32)
+    out_r = embedding_bag(table, flat, offs, mode="sum")
+    np.testing.assert_allclose(np.asarray(out_r[0]), exp0, rtol=1e-6)

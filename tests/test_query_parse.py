@@ -1,0 +1,53 @@
+"""attr_options parsing (Table 1) and TimeExpression parsing."""
+import numpy as np
+import pytest
+
+from repro.core.events import GraphHistoryBuilder
+from repro.core.query import TimeExpression, parse_attr_options
+
+
+def make_universe():
+    b = GraphHistoryBuilder()
+    b.add_node(0, 1, attrs={"name": "x", "salary": 10.0, "age": 3.0})
+    b.add_node(1, 1)
+    b.add_edge(0, 1, 2, attrs={"weight": 1.0, "label": "e"})
+    return b.finalize()[0]
+
+
+def test_default_no_attrs():
+    uni = make_universe()
+    o = parse_attr_options("", uni)
+    assert not o.wants_attrs
+
+
+def test_table1_semantics():
+    uni = make_universe()
+    o = parse_attr_options("+node:all", uni)
+    assert set(o.node_cols) == {0, 1, 2}
+    o = parse_attr_options("+node:all-node:salary+edge:weight", uni)
+    assert uni.attr_col("node", "salary") not in o.node_cols
+    assert len(o.node_cols) == 2
+    assert o.edge_cols == (uni.attr_col("edge", "weight"),)
+    # specific attr overrides -node:all default
+    o = parse_attr_options("+node:age", uni)
+    assert o.node_cols == (uni.attr_col("node", "age"),)
+
+
+def test_parse_errors():
+    uni = make_universe()
+    with pytest.raises(KeyError):
+        parse_attr_options("+node:nonexistent", uni)
+    with pytest.raises(ValueError):
+        parse_attr_options("node:all", uni)
+
+
+def test_time_expression_parse_and_eval():
+    tex = TimeExpression.parse("(t0 & ~t1) | t2", [10, 20, 30])
+    m = [np.array([1, 1, 0, 0], bool), np.array([0, 1, 0, 1], bool),
+         np.array([0, 0, 1, 0], bool)]
+    out = tex.evaluate(m)
+    assert np.array_equal(out, np.array([1, 0, 1, 0], bool))
+    with pytest.raises(ValueError):
+        TimeExpression.parse("t0 &", [1])
+    with pytest.raises(ValueError):
+        TimeExpression.parse("t5", [1, 2])

@@ -1,0 +1,62 @@
+"""Registry coverage: all 40 (arch × shape) cells are well-defined, their
+abstract args / pspec trees are structurally consistent, and the skip
+policy matches DESIGN.md §4."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.registry import (ARCH_IDS, get_cell, list_cells,
+                                    shapes_for)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_cell_count():
+    cells = list_cells()
+    assert len(cells) == 40
+    assert len({a for a, _ in cells}) == 10
+
+
+def test_all_cells_defined(mesh):
+    skips = 0
+    for arch, shape in list_cells():
+        cell = get_cell(arch, shape, mesh, multi_pod=False)
+        if cell.skip_reason:
+            skips += 1
+            assert shape == "long_500k"
+            continue
+        assert cell.fn is not None
+        # args and pspecs trees must match leaf-for-leaf
+        a_leaves = jax.tree.leaves(cell.args)
+        s_leaves = jax.tree.leaves(
+            cell.pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)
+        assert len(a_leaves) == len(s_leaves), (arch, shape)
+        assert cell.flops_model > 0
+    assert skips == 3  # yi, stablelm, arctic long_500k
+
+
+def test_moe_active_params():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    c = get_cell("deepseek-v3-671b", "train_4k", mesh, False)
+    assert 600e9 < c.n_params < 750e9      # ≈671B total
+    assert 30e9 < c.n_params_active < 45e9  # ≈37B active
+    c2 = get_cell("yi-34b", "train_4k", mesh, False)
+    assert 30e9 < c2.n_params < 40e9
+    assert c2.n_params == c2.n_params_active
+
+
+def test_param_count_sanity():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    expected = {"stablelm-12b": (11e9, 14e9), "gemma3-1b": (0.7e9, 1.4e9),
+                "arctic-480b": (420e9, 520e9)}
+    for arch, (lo, hi) in expected.items():
+        c = get_cell(arch, "train_4k", mesh, False)
+        assert lo < c.n_params < hi, (arch, c.n_params)

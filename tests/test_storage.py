@@ -1,0 +1,127 @@
+"""KV backends, columnar codec, crash recovery, checkpointing."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.deltas import AttrDelta, Delta
+from repro.storage import columnar as col
+from repro.storage.checkpoint import (latest_step, restore_checkpoint,
+                                      restore_param_history,
+                                      save_checkpoint, save_param_delta)
+from repro.storage.kv import LogFileKV, MemKV, PartitionedKV
+
+
+def test_columnar_roundtrip():
+    rng = np.random.default_rng(0)
+    arrays = {"a": rng.integers(0, 100, 17).astype(np.int32),
+              "b": rng.standard_normal((3, 5)).astype(np.float32),
+              "c": np.zeros(0, np.int16)}
+    blob = col.pack_arrays(arrays)
+    out = col.unpack_arrays(blob)
+    for k in arrays:
+        assert np.array_equal(out[k], arrays[k])
+        assert out[k].dtype == arrays[k].dtype
+
+
+def test_delta_codec_roundtrip():
+    rng = np.random.default_rng(1)
+    d = Delta(rng.integers(0, 50, 5).astype(np.int32),
+              rng.integers(0, 50, 3).astype(np.int32),
+              rng.integers(0, 90, 7).astype(np.int32),
+              np.zeros(0, np.int32),
+              AttrDelta(np.array([1, 2], np.int32), np.array([0, 1], np.int16),
+                        np.array([1.5, 2.5], np.float32),
+                        np.array([np.nan, 0.5], np.float32)),
+              AttrDelta.empty())
+    parts = col.encode_delta(d)
+    d2 = col.decode_delta(parts)
+    assert np.array_equal(d2.node_add, d.node_add)
+    assert np.array_equal(d2.edge_add, d.edge_add)
+    assert np.array_equal(d2.node_attr.new, d.node_attr.new)
+    assert np.array_equal(d2.node_attr.old, d.node_attr.old, equal_nan=True)
+
+
+@pytest.mark.parametrize("make", [MemKV, None])
+def test_kv_backends(tmp_path, make):
+    kv = make() if make else LogFileKV(str(tmp_path / "kv"))
+    kv.put((0, 1, "struct"), b"hello")
+    kv.put((2, 7, "nodeattr.3"), b"world" * 100)
+    assert kv.get((0, 1, "struct")) == b"hello"
+    assert (2, 7, "nodeattr.3") in kv
+    assert (9, 9, "x") not in kv
+    assert set(kv.keys()) == {(0, 1, "struct"), (2, 7, "nodeattr.3")}
+    kv.put((0, 1, "struct"), b"hello2")  # overwrite
+    assert kv.get((0, 1, "struct")) == b"hello2"
+    assert kv.stats.puts == 3
+    kv.close()
+
+
+def test_logfile_kv_reopen_and_torn_tail(tmp_path):
+    path = str(tmp_path / "kv")
+    kv = LogFileKV(path)
+    kv.put((0, 1, "a"), b"x" * 100)
+    kv.flush()
+    kv.put((0, 2, "b"), b"y" * 100)   # not flushed into the index
+    kv._fh.flush()
+    kv._fh.close()
+    # simulate a crash with a torn tail record
+    with open(os.path.join(path, "kv.log"), "ab") as f:
+        f.write(b"RKV1\x05\x00\x00\x00abc")  # truncated record
+    kv2 = LogFileKV(path)
+    assert kv2.get((0, 1, "a")) == b"x" * 100
+    assert kv2.get((0, 2, "b")) == b"y" * 100  # recovered unflushed record
+    assert (0, 3, "c") not in kv2
+    kv2.close()
+
+
+def test_partitioned_kv(tmp_path):
+    kv = PartitionedKV([MemKV(), MemKV(), MemKV()])
+    for p in range(3):
+        kv.put((p, 0, "struct"), bytes([p]))
+    assert all(kv.get((p, 0, "struct")) == bytes([p]) for p in range(3))
+    assert len(kv.parts[1].keys()) == 1
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = LogFileKV(str(tmp_path / "ckpt"))
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones(5, jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    save_checkpoint(store, 100, tree, extra={"data_cursor": 12345},
+                    n_shards=2)
+    assert latest_step(store) == 100
+    got, extra, step = restore_checkpoint(store, like=tree)
+    assert step == 100 and extra["data_cursor"] == 12345
+    assert np.array_equal(np.asarray(got["w"]), np.arange(12).reshape(3, 4))
+    assert got["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_crash_keeps_previous(tmp_path):
+    store = LogFileKV(str(tmp_path / "ckpt"))
+    tree = {"w": jnp.zeros(4)}
+    save_checkpoint(store, 1, tree)
+    # a partial later checkpoint without manifest/latest commit
+    store.put((0, 2, "ckpt/w/0"), b"garbage-partial")
+    got, _, step = restore_checkpoint(store, like=tree)
+    assert step == 1
+
+
+def test_param_delta_history(tmp_path):
+    store = MemKV()
+    t0 = {"w": np.arange(10, dtype=np.float32)}
+    t1 = {"w": t0["w"].copy()}
+    t1["w"][3] = 99.0
+    t2 = {"w": t1["w"].copy()}
+    t2["w"][7] = -1.0
+    save_param_delta(store, 0, None, t0)
+    b1 = save_param_delta(store, 1, 0, t1, t0)
+    b2 = save_param_delta(store, 2, 1, t2, t1)
+    full = save_param_delta(MemKV(), 0, None, t2)
+    assert b1 < 200 and b2 < 200  # sparse deltas are tiny
+    hist = restore_param_history(store, [0, 1, 2], like=t0)
+    assert hist[1]["w"][3] == 99.0 and hist[1]["w"][7] == 7.0
+    assert hist[2]["w"][7] == -1.0
