@@ -1,0 +1,146 @@
+"""BENCH_materialize: workload-aware materialization advisor + snapshot
+cache vs cold retrieval and the fixed-depth §4.5 heuristic, at *equal*
+GraphPool memory budget.
+
+Emits rows in the run.py contract and writes ``BENCH_materialize.json``
+with the headline speedups.  Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.materialize_bench --quick
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import GraphManager
+from repro.core.query import NO_ATTRS
+from repro.data.generators import churn_network
+
+OUT_JSON = "BENCH_materialize.json"
+
+
+def _skewed_times(tmax: int, n: int, seed: int = 0,
+                  zipf: float = 1.3) -> list[int]:
+    """Recency-skewed query times over 256 distinct points (hot recent
+    head + long historical tail — the snapshot-dashboard shape)."""
+    rng = np.random.default_rng(seed)
+    distinct = np.sort(rng.integers(0, tmax + 1, 256))
+    ranks = np.minimum(rng.zipf(zipf, n), distinct.size - 1)
+    return [int(t) for t in distinct[distinct.size - 1 - ranks]]
+
+
+def _measure(fn, times) -> tuple[float, float]:
+    t0 = time.perf_counter()
+    for t in times:
+        fn(t)
+    dt = time.perf_counter() - t0
+    return dt / len(times) * 1e6, dt
+
+
+def _plan_bytes(gm: GraphManager, times) -> float:
+    sample = times[:: max(len(times) // 64, 1)]
+    return float(np.mean([gm.dg.plan_singlepoint(t, NO_ATTRS).total_weight
+                          for t in sample]))
+
+
+def _fixed_depth_under_budget(uni, ev, L: int, budget: int) -> GraphManager:
+    """The pre-advisor heuristic: deepest materialize_roots() whose pool
+    stays under the budget."""
+    best = GraphManager(uni, ev, L=L, k=2, diff_fn="intersection",
+                        cache_bytes=0)
+    for depth in (1, 2, 3, 4):
+        gm = GraphManager(uni, ev, L=L, k=2, diff_fn="intersection",
+                          cache_bytes=0)
+        gm.materialize_roots(depth=depth)
+        if gm.pool.memory_bytes() > budget:
+            break
+        best = gm
+    return best
+
+
+def bench_materialize(quick: bool = False):
+    n = 6_000 if quick else 20_000
+    budget = 16 << 20
+    uni, ev = churn_network(n_initial_edges=n // 12, n_events=n, seed=42)
+    L = max(n // 40, 64)
+    tmax = int(ev.time[-1])
+    rows = []
+    report: dict = {"n_events": n, "budget_bytes": budget, "workloads": {}}
+
+    for wname, times in (("skewed", _skewed_times(tmax, 1500, seed=1)),
+                         ("uniform", [int(t) for t in
+                                      np.random.default_rng(2).integers(
+                                          0, tmax + 1, 600)])):
+        res: dict = {}
+
+        cold = GraphManager(uni, ev, L=L, k=2, diff_fn="intersection",
+                            cache_bytes=0)
+        us, _ = _measure(lambda t: cold.dg.get_snapshot(t, pool=cold.pool),
+                         times)
+        res["cold"] = {"us_per_q": us, "plan_bytes": _plan_bytes(cold, times),
+                       "pool_bytes": cold.pool.memory_bytes()}
+        rows.append((f"materialize/{wname}/cold", us,
+                     dict(res["cold"], workload=wname)))
+
+        fixed = _fixed_depth_under_budget(uni, ev, L, budget)
+        us, _ = _measure(lambda t: fixed.dg.get_snapshot(t, pool=fixed.pool),
+                         times)
+        res["fixed_depth"] = {"us_per_q": us,
+                              "plan_bytes": _plan_bytes(fixed, times),
+                              "pool_bytes": fixed.pool.memory_bytes()}
+        rows.append((f"materialize/{wname}/fixed-depth", us,
+                     dict(res["fixed_depth"], workload=wname)))
+
+        adv = GraphManager(uni, ev, L=L, k=2, diff_fn="intersection",
+                           cache_bytes=0)
+        adv.enable_advisor(budget_bytes=budget, replan_every=256)
+        # let the advisor see the head of the workload, then replan once
+        for t in times[:128]:
+            adv.get_snapshot(t)
+        adv.advisor.replan()
+        us, _ = _measure(lambda t: adv.get_snapshot(t), times)
+        res["advised"] = {"us_per_q": us, "plan_bytes": _plan_bytes(adv, times),
+                          "pool_bytes": adv.pool.memory_bytes(),
+                          "pins": len(adv.advisor.pinned)}
+        rows.append((f"materialize/{wname}/advised", us,
+                     dict(res["advised"], workload=wname)))
+
+        full = GraphManager(uni, ev, L=L, k=2, diff_fn="intersection")
+        full.enable_advisor(budget_bytes=budget, replan_every=256)
+        us, _ = _measure(lambda t: full.get_snapshot(t), times)
+        res["advised_cached"] = {
+            "us_per_q": us, "pool_bytes": full.pool.memory_bytes(),
+            "cache_hits": full.cache.hits,
+            "cache_misses": full.cache.misses,
+            "cache_bytes": full.cache.nbytes()}
+        rows.append((f"materialize/{wname}/advised+cache", us,
+                     dict(res["advised_cached"], workload=wname)))
+
+        res["speedup_advised_vs_cold"] = round(
+            res["cold"]["us_per_q"] / res["advised"]["us_per_q"], 3)
+        res["speedup_cached_vs_cold"] = round(
+            res["cold"]["us_per_q"] / res["advised_cached"]["us_per_q"], 3)
+        res["speedup_advised_vs_fixed"] = round(
+            res["fixed_depth"]["us_per_q"] / res["advised"]["us_per_q"], 3)
+        report["workloads"][wname] = res
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("materialize/report", 0.0, {"json": OUT_JSON}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_materialize(quick=args.quick):
+        print(f"{name},{us:.1f},\"{json.dumps(derived)}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

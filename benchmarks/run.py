@@ -17,9 +17,10 @@ def main() -> None:
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
 
-    from . import paper_figs, roofline_report
+    from . import materialize_bench, paper_figs, roofline_report
 
     benches = [
+        materialize_bench.bench_materialize,
         paper_figs.fig6_vs_copylog,
         paper_figs.fig7_vs_interval_tree,
         paper_figs.fig8a_graphpool_memory,

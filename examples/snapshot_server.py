@@ -19,7 +19,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--materialize", action="store_true")
+    ap.add_argument("--materialize", action="store_true",
+                    help="fixed-depth §4.5 pinning (the manual policy)")
+    ap.add_argument("--advise", action="store_true",
+                    help="workload-aware advisor + budget (core/materialize)")
+    ap.add_argument("--budget-mb", type=float, default=16.0)
     args = ap.parse_args()
 
     print("building index ...")
@@ -28,6 +32,11 @@ def main():
                       num_partitions=4)
     if args.materialize:
         gm.materialize_roots(depth=2)
+    if args.advise:
+        advice = gm.enable_advisor(budget_bytes=int(args.budget_mb * 2**20))
+        print(f"advisor pinned {len(advice.chosen)} nodes, "
+              f"expected plan-byte saving "
+              f"{advice.expected_saved_bytes:.0f}")
     tmax = int(ev.time[-1])
     rng = np.random.default_rng(0)
 

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast test subset: everything except the multi-second `slow` tests
+# (distributed subprocesses, reduced-model smoke runs).  Full suite:
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q -m "not slow" "$@"

@@ -6,10 +6,14 @@ Public surface:
 * :class:`~repro.core.deltagraph.DeltaGraph` — the hierarchical index
 * :class:`~repro.core.graphpool.GraphPool` — overlaid in-memory snapshots
 * :class:`~repro.core.manager.GraphManager` — the paper's API façade
+* :class:`~repro.core.materialize.MaterializationAdvisor` — workload-aware
+  memory materialization + the snapshot LRU cache
 """
 from .deltagraph import DeltaGraph  # noqa: F401
 from .events import (EventList, GraphHistoryBuilder, GraphUniverse,  # noqa: F401
                      MaterializedState, apply_events, replay)
 from .graphpool import GraphPool  # noqa: F401
 from .manager import GraphManager, HistGraph  # noqa: F401
+from .materialize import (Advice, AdvisorConfig, MaterializationAdvisor,  # noqa: F401
+                          SnapshotCache, WorkloadStats)
 from .query import AttrOptions, TimeExpression, parse_attr_options  # noqa: F401

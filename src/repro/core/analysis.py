@@ -152,6 +152,17 @@ def segment_tree_space(rates: Rates) -> float:
     return float(E * math.log2(E))
 
 
+def expected_singlepoint_bytes(rates: Rates, L: int, k: int,
+                               diff_fn: str = "balanced") -> float:
+    """Expected cold singlepoint retrieval weight in events (≈ bytes up to
+    the per-event encoding constant): super-root→leaf path weight plus half
+    a leaf-eventlist.  The materialization advisor uses this as its
+    cold-start prior before any query has been recorded."""
+    if diff_fn == "intersection":
+        return rates.final_size + L / 2
+    return balanced_path_weight(rates) + L / 2
+
+
 # ---------------------------------------------------------------------------
 # §5.4 parameter guidance
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import json
+import time
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -160,6 +161,9 @@ class DeltaGraph:
         # recent (unindexed) events, §6
         self.recent = EventList.empty()
         self._total_events = 0
+        # online query-traffic histogram (materialize.WorkloadStats),
+        # attached by GraphManager; every execute() records into it
+        self.workload = None
 
     # ------------------------------------------------------------------ build
     def build(self, events: EventList) -> "DeltaGraph":
@@ -787,6 +791,7 @@ class DeltaGraph:
     def execute(self, plan: Plan, options: AttrOptions = NO_ATTRS,
                 pool=None) -> dict[Any, MaterializedState]:
         """Run a plan; returns states for plan.targets' keys."""
+        t_start = time.perf_counter()
         states: dict[Any, MaterializedState] = {}
         for step in plan.steps:
             kind = step.action[0]
@@ -828,6 +833,17 @@ class DeltaGraph:
             st.node_mask &= ~self.universe.node_transient[: st.node_mask.size]
             st.edge_mask &= ~self.universe.edge_transient[: st.edge_mask.size]
             out[tgt] = st
+        if self.workload is not None:
+            # time-point targets only (node-materialization plans carry
+            # ("node", nid) targets and are not workload)
+            tts = [t for t in plan.targets
+                   if isinstance(t, (int, np.integer))]
+            if tts:
+                wall = (time.perf_counter() - t_start) / len(tts)
+                share = plan.total_weight / len(tts)
+                for t in tts:
+                    self.workload.record(self._leaf_for_time(int(t)), share,
+                                         options, wall)
         return out
 
     # --------------------------------------------------------------- queries

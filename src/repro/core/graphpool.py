@@ -288,6 +288,32 @@ class GraphPool:
         return done
 
     # ------------------------------------------------------------ accounting
+    def entry_attr_bytes(self, gid: int) -> int:
+        e = self.table[gid]
+        return (sum(v.nbytes for v in e.node_attr_cols.values())
+                + sum(v.nbytes for v in e.edge_attr_cols.values()))
+
+    def projected_bytes(self, extra_bits: int = 0,
+                        extra_attr_bytes: int = 0) -> int:
+        """What :meth:`memory_bytes` would read after allocating
+        ``extra_bits`` more plane rows (accounting for free/recyclable bits
+        and the doubling growth policy) plus ``extra_attr_bytes`` of
+        attribute columns.  The materialization advisor budgets against
+        this before touching the pool."""
+        free = len(self._free_bits) + sum(
+            len(self.table[g].bits) for g in self._pending_clean
+            if g in self.table)
+        rows = self.node_planes.shape[0]
+        need = extra_bits - free
+        while need > 0:
+            grow = max(rows, 4)
+            rows += grow
+            need -= grow
+        planes = rows * (self.Wn + self.We) * 4
+        attrs = sum(self.entry_attr_bytes(g) for g, e in self.table.items()
+                    if not e.released)
+        return planes + attrs + max(extra_attr_bytes, -attrs)
+
     def memory_bytes(self) -> int:
         planes = self.node_planes.nbytes + self.edge_planes.nbytes
         attrs = 0

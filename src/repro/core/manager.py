@@ -16,9 +16,12 @@ import numpy as np
 
 from ..graph.csr import CSR, build_csr
 from ..storage.kv import KVStore, MemKV
+from .analysis import estimate_rates
 from .deltagraph import DeltaGraph
 from .events import EventList, GraphUniverse, MaterializedState, replay
 from .graphpool import CURRENT_GID, GraphPool
+from .materialize import (Advice, AdvisorConfig, MaterializationAdvisor,
+                          SnapshotCache, WorkloadStats)
 from .query import NO_ATTRS, AttrOptions, TimeExpression, parse_attr_options
 
 
@@ -110,7 +113,9 @@ class GraphManager:
                  diff_fn: str | Sequence[str] = "balanced",
                  diff_params: dict | Sequence[dict] | None = None,
                  num_partitions: int = 1,
-                 partition_fn: str = "word_cyclic") -> None:
+                 partition_fn: str = "word_cyclic",
+                 cache_bytes: int = 32 << 20,
+                 cache_entries: int = 256) -> None:
         self.universe = universe
         self.store = store if store is not None else MemKV()
         self.dg = DeltaGraph(universe, self.store, L=L, k=k, diff_fn=diff_fn,
@@ -120,13 +125,41 @@ class GraphManager:
         self.pool = GraphPool(universe)
         self.pool.set_current(replay(universe, events,
                                      int(events.time[-1]) if len(events) else 0))
+        # workload-aware materialization + caching (core/materialize.py)
+        self.workload = WorkloadStats()
+        self.dg.workload = self.workload
+        self.rates = estimate_rates(events)
+        self.cache = (SnapshotCache(cache_bytes, cache_entries)
+                      if cache_bytes > 0 else None)
+        self.advisor: MaterializationAdvisor | None = None
 
     # ------------------------------------------------------------- retrieval
+    def get_snapshot(self, t: int, attr_options: str | AttrOptions = "",
+                     use_current: bool = True) -> MaterializedState:
+        """Singlepoint retrieval through the snapshot cache (exact-timepoint
+        LRU) with the advisor's online replan hook.  Results are always
+        bit-identical to a cold ``DeltaGraph.get_snapshot``."""
+        opts = (attr_options if isinstance(attr_options, AttrOptions)
+                else parse_attr_options(attr_options, self.universe))
+        key = (SnapshotCache.key(t, opts, use_current)
+               if self.cache is not None else None)
+        if self.cache is not None:
+            hit = self.cache.get(key)
+            if hit is not None:
+                self.workload.record_cache_hit()
+                return hit
+        st = self.dg.get_snapshot(t, opts, pool=self.pool,
+                                  use_current=use_current)
+        if self.cache is not None:
+            self.cache.put(key, st)
+        if self.advisor is not None:
+            self.advisor.on_query()
+        return st
+
     def get_hist_graph(self, t: int, attr_options: str = "",
                        use_current: bool = True) -> HistGraph:
         opts = parse_attr_options(attr_options, self.universe)
-        st = self.dg.get_snapshot(t, opts, pool=self.pool,
-                                  use_current=use_current)
+        st = self.get_snapshot(t, opts, use_current=use_current)
         gid = self.pool.insert_snapshot(st)
         return HistGraph(self, gid, t, opts)
 
@@ -170,8 +203,41 @@ class GraphManager:
         self.dg.append_events(ev)
         if len(self.dg.leaf_nids) != before:
             self.pool.mark_flushed()
+        if self.cache is not None and len(ev):
+            self.cache.invalidate_from(int(ev.time.min()))
 
     # -------------------------------------------------------- materialization
+    def enable_advisor(self, budget_bytes: int = 64 << 20, *,
+                       replan_every: int = 64, drift_threshold: float = 0.25,
+                       max_candidates: int = 256,
+                       warm_start: bool = True) -> Advice | None:
+        """Turn on workload-aware materialization (§4.5 made adaptive).
+
+        The advisor re-plans every ``replan_every`` retrievals (or earlier
+        under workload drift), pinning/evicting DeltaGraph nodes in the
+        GraphPool so that ``pool.memory_bytes()`` stays under
+        ``budget_bytes``.  ``warm_start`` runs one plan immediately (with
+        the uniform / analytical prior if no queries were recorded yet).
+        Re-enabling evicts the previous advisor's pins first."""
+        self.disable_advisor()
+        cfg = AdvisorConfig(budget_bytes=budget_bytes,
+                            replan_every=replan_every,
+                            drift_threshold=drift_threshold,
+                            max_candidates=max_candidates)
+        self.advisor = MaterializationAdvisor(self.dg, self.pool,
+                                              self.workload, cfg,
+                                              rates=self.rates)
+        return self.advisor.replan() if warm_start else None
+
+    def disable_advisor(self) -> None:
+        """Evict every advisor pin and stop re-planning."""
+        if self.advisor is None:
+            return
+        for nid in list(self.advisor.pinned):
+            self.dg.unmaterialize(nid, self.pool)
+        self.pool.cleaner(force=True)
+        self.advisor = None
+
     def materialize_roots(self, depth: int = 1) -> list[int]:
         """Materialize the top `depth` interior levels (§4.5)."""
         out = []

@@ -12,6 +12,7 @@ import jax           # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs.registry import get_cell, list_cells  # noqa: E402
+from ..runtime import compat  # noqa: E402
 from . import hlo_analysis  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
 
@@ -50,7 +51,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
         return rec
     in_sh = _shardings(mesh, cell.pspecs)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(cell.fn, in_shardings=in_sh).lower(*cell.args)
         t1 = time.time()
         compiled = lowered.compile()

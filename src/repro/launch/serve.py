@@ -1,6 +1,12 @@
-"""Serving launcher: batched autoregressive decode for LM archs (reduced
-config on CPU; the production mesh decode path is exercised by dryrun.py)
-and batched CTR scoring for DIN."""
+"""Serving launchers.
+
+* ``--mode snapshots`` — historical-snapshot traffic against a
+  GraphManager with the workload-aware materialization advisor + snapshot
+  cache enabled (the paper's retrieval service, core/materialize.py);
+* ``--mode model`` (default) — batched autoregressive decode for LM archs
+  (reduced config on CPU; the production mesh decode path is exercised by
+  dryrun.py) and batched CTR scoring for DIN.
+"""
 from __future__ import annotations
 
 import argparse
@@ -13,6 +19,54 @@ import jax.numpy as jnp
 
 from ..configs.registry import family_of, get_arch, reduced_config
 from ..models import common as mc
+
+
+def serve_snapshots(n_events: int, budget_mb: float, queries: int,
+                    zipf: float, seed: int = 0) -> None:
+    """Drive a recency-skewed snapshot workload and report cold vs advised
+    latency plus cache hit rate — the quickstart for the advisor."""
+    from ..core import GraphManager
+    from ..data.generators import churn_network
+
+    uni, ev = churn_network(n_initial_edges=max(n_events // 12, 50),
+                            n_events=n_events, seed=seed)
+    tmax = int(ev.time[-1])
+    rng = np.random.default_rng(seed)
+    # zipf-ish recency skew over a modest set of distinct timepoints, the
+    # shape real snapshot traffic has (hot recent dashboards + long tail)
+    distinct = np.sort(rng.integers(0, tmax + 1, 256))
+    ranks = rng.zipf(zipf, queries) if zipf > 1 else rng.integers(
+        1, distinct.size, queries)
+    ts = distinct[distinct.size - 1 - np.minimum(ranks, distinct.size - 1)]
+
+    cold = GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
+                        diff_fn="intersection", cache_bytes=0)
+    t0 = time.perf_counter()
+    for t in ts:
+        cold.dg.get_snapshot(int(t), pool=cold.pool)
+    cold_s = time.perf_counter() - t0
+
+    gm = GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
+                      diff_fn="intersection")
+    advice = gm.enable_advisor(budget_bytes=int(budget_mb * 2**20),
+                               replan_every=max(queries // 8, 32))
+    t0 = time.perf_counter()
+    for t in ts:
+        gm.get_snapshot(int(t))
+    adv_s = time.perf_counter() - t0
+
+    q = len(ts)
+    print(f"cold    : {cold_s / q * 1e6:8.1f} us/q  ({q / cold_s:8.0f} q/s)")
+    print(f"advised : {adv_s / q * 1e6:8.1f} us/q  ({q / adv_s:8.0f} q/s)  "
+          f"speedup x{cold_s / adv_s:.2f}")
+    print(f"pins={len(gm.advisor.pinned)} "
+          f"pool={gm.pool.memory_bytes() / 2**20:.2f} MiB "
+          f"(budget {budget_mb} MiB)  "
+          f"cache hits={gm.cache.hits}/{gm.cache.hits + gm.cache.misses} "
+          f"({gm.cache.nbytes() / 2**20:.2f} MiB)")
+    if advice is not None:
+        print(f"warm-start expected saving: {advice.expected_saved_bytes:.0f}"
+              f" / {advice.expected_cold_bytes:.0f} plan-bytes")
 
 
 def serve_lm(arch: str, batch: int, prompt_len: int, gen: int) -> None:
@@ -78,12 +132,22 @@ def serve_din(batch: int) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("model", "snapshots"), default="model")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--events", type=int, default=20_000,
+                    help="snapshots mode: history size")
+    ap.add_argument("--budget-mb", type=float, default=16.0,
+                    help="snapshots mode: GraphPool memory budget")
+    ap.add_argument("--queries", type=int, default=2_000)
+    ap.add_argument("--zipf", type=float, default=1.3,
+                    help="snapshots mode: recency skew (<=1 → uniform)")
     args = ap.parse_args()
-    if family_of(args.arch) == "recsys":
+    if args.mode == "snapshots":
+        serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf)
+    elif family_of(args.arch) == "recsys":
         serve_din(args.batch)
     else:
         serve_lm(args.arch, args.batch, args.prompt, args.gen)

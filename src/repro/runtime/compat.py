@@ -1,0 +1,52 @@
+"""Version compatibility shims for the pinned JAX (0.4.37).
+
+Newer JAX exposes ``jax.shard_map``, ``jax.set_mesh`` and
+``jax.sharding.AxisType``; the pinned release has none of the three.
+Everything in the repo that touches those surfaces goes through this
+module so the same code runs on 0.4.37 and on current JAX.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+# -- shard_map ---------------------------------------------------------------
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    shard_map = jax.shard_map
+else:                                              # pinned 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with ``axis_types=Auto`` where supported; the
+    0.4.x signature has no ``axis_types`` and is Auto-only anyway."""
+    axis_type = getattr(getattr(jax, "sharding", None), "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    need = math.prod(axis_shapes)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:need]).reshape(tuple(axis_shapes)),
+                tuple(axis_names))
+
+
+def set_mesh(mesh: Mesh):
+    """``jax.set_mesh`` context manager, or the classic ``with mesh:``
+    scope on 0.4.x (NamedSharding-carrying code paths only need the
+    latter)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return _mesh_scope(mesh)
+
+
+@contextlib.contextmanager
+def _mesh_scope(mesh: Mesh):
+    with mesh:
+        yield mesh

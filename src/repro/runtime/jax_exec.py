@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import compat
 from ..core import bitmaps as bmod
 from ..core.deltagraph import DeltaGraph, Plan
 from ..core.events import (EV_DEL_EDGE, EV_DEL_NODE, EV_NEW_EDGE, EV_NEW_NODE)
@@ -211,7 +212,7 @@ def make_retrieval_fn(mesh: Mesh, axis: str = "data"):
         out, _ = jax.lax.scan(step, base, (adds, dels))
         return out
 
-    shard = jax.shard_map(
+    shard = compat.shard_map(
         _local, mesh=mesh,
         in_specs=(P(axis, None), P(None, axis, None), P(None, axis, None)),
         out_specs=P(axis, None))

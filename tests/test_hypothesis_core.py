@@ -7,7 +7,11 @@
 * multipoint ≡ singlepoint.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import GraphManager, replay
 from repro.core import bitmaps as bm

@@ -1,0 +1,212 @@
+"""Workload-aware materialization advisor + snapshot cache
+(core/materialize.py): budget, eviction under drift, cache coherence, and
+the advised-equals-cold property."""
+import numpy as np
+import pytest
+
+from repro.core import GraphManager, replay
+from repro.core.materialize import (AdvisorConfig, MaterializationAdvisor,
+                                    SnapshotCache, WorkloadStats)
+from repro.core.query import NO_ATTRS, parse_attr_options
+from repro.data.generators import churn_network, random_history
+
+
+def _gm(n=2000, seed=3, **kw):
+    uni, ev = churn_network(n_initial_edges=max(n // 12, 30), n_events=n,
+                            seed=seed)
+    kw.setdefault("L", max(n // 25, 32))
+    kw.setdefault("k", 2)
+    kw.setdefault("diff_fn", "intersection")
+    return uni, ev, GraphManager(uni, ev, **kw)
+
+
+# ---------------------------------------------------------------- budget
+
+def test_budget_respected_by_meter():
+    _, _, gm = _gm(cache_bytes=0)
+    budget = gm.pool.memory_bytes() + (64 << 10)
+    advice = gm.enable_advisor(budget_bytes=budget)
+    assert gm.pool.memory_bytes() <= budget
+    assert advice.pool_bytes_after <= budget
+    assert len(gm.advisor.pinned) >= 1          # budget allows some pins
+    # every pin is a registered materialized source
+    for nid, gid in gm.advisor.pinned.items():
+        assert gm.dg.nodes[nid].materialized_as == gid
+
+
+def test_tiny_budget_pins_nothing_over_meter():
+    _, _, gm = _gm(cache_bytes=0)
+    base = gm.pool.memory_bytes()
+    gm.enable_advisor(budget_bytes=base)  # no headroom at all
+    assert gm.pool.memory_bytes() <= base
+
+
+def test_projected_bytes_monotone():
+    _, _, gm = _gm(cache_bytes=0)
+    p0 = gm.pool.projected_bytes()
+    assert p0 >= gm.pool.memory_bytes() - 1  # projection covers the meter
+    assert gm.pool.projected_bytes(extra_bits=100) > p0
+    assert gm.pool.projected_bytes(extra_attr_bytes=1 << 20) == p0 + (1 << 20)
+
+
+# ------------------------------------------------------------- eviction
+
+def test_eviction_under_drifted_workload():
+    uni, ev, gm = _gm(n=3000, cache_bytes=0)
+    tmax = int(ev.time[-1])
+    budget = gm.pool.memory_bytes() + (32 << 10)
+    gm.enable_advisor(budget_bytes=budget, replan_every=10**9)
+
+    # phase 1: hammer the oldest tenth of history, replan
+    for t in np.linspace(0, tmax // 10, 60).astype(int):
+        gm.get_snapshot(int(t))
+    gm.advisor.replan()
+    early_pins = set(gm.advisor.pinned)
+    assert early_pins
+
+    # phase 2: workload drifts to the newest tenth; fast decay so the old
+    # traffic actually fades from the histogram within the test
+    gm.workload.decay = 0.9
+    for t in np.linspace(9 * tmax // 10, tmax, 200).astype(int):
+        gm.get_snapshot(int(t))
+    gm.advisor.replan()
+    late_pins = set(gm.advisor.pinned)
+    assert late_pins != early_pins, "drifted workload must change the pin set"
+    dropped = early_pins - late_pins
+    assert dropped, "stale pins must be evicted (explicitly or by the " \
+                    "on_query drift hook)"
+    for nid in dropped:
+        assert gm.dg.nodes[nid].materialized_as is None
+    assert gm.pool.memory_bytes() <= budget
+
+
+def test_on_query_replans_on_drift():
+    uni, ev, gm = _gm(n=3000, cache_bytes=0)
+    tmax = int(ev.time[-1])
+    gm.enable_advisor(budget_bytes=gm.pool.memory_bytes() + (32 << 10),
+                      replan_every=10**9, drift_threshold=0.2)
+    for t in np.linspace(0, tmax // 10, 40).astype(int):
+        gm.get_snapshot(int(t))
+    gm.advisor.replan()
+    plan_hist = dict(gm.advisor._hist_at_plan)
+    for t in np.linspace(9 * tmax // 10, tmax, 120).astype(int):
+        gm.get_snapshot(int(t))
+    # drift hook fired at least once: the snapshot taken at plan time moved
+    assert gm.advisor._hist_at_plan != plan_hist
+
+
+# ---------------------------------------------------------------- cache
+
+def test_cache_hit_bit_identical():
+    uni, ev, gm = _gm()
+    t = int(ev.time[len(ev) // 2])
+    s1 = gm.get_snapshot(t, "+node:all+edge:all")
+    assert gm.cache.misses == 1 and gm.cache.hits == 0
+    s2 = gm.get_snapshot(t, "+node:all+edge:all")
+    assert gm.cache.hits == 1
+    assert s1.equal(s2)
+    assert np.array_equal(s1.node_mask, s2.node_mask)
+    # hit result equals a cache-disabled manager's cold result
+    _, _, cold = _gm(cache_bytes=0)
+    s3 = cold.get_snapshot(t, "+node:all+edge:all")
+    assert cold.cache is None
+    assert s1.equal(s3)
+
+
+def test_cache_key_separates_options_and_current():
+    uni, ev, gm = _gm()
+    t = int(ev.time[len(ev) // 2])
+    gm.get_snapshot(t)                           # NO_ATTRS
+    gm.get_snapshot(t, "+node:all")              # different columns
+    gm.get_snapshot(t, use_current=False)        # different path space
+    assert gm.cache.hits == 0 and gm.cache.misses == 3
+
+
+def test_cache_eviction_bounds():
+    cache = SnapshotCache(max_bytes=1 << 30, max_entries=4)
+    uni, ev, gm = _gm(cache_bytes=0)
+    times = [int(t) for t in np.linspace(0, int(ev.time[-1]), 10)]
+    for t in times:
+        st = gm.dg.get_snapshot(t, pool=gm.pool)
+        cache.put(SnapshotCache.key(t, NO_ATTRS, True), st)
+    assert len(cache) <= 4
+
+
+def test_cache_invalidated_by_live_update():
+    uni, ev = churn_network(n_initial_edges=100, n_events=1500, seed=5)
+    cut = len(ev) - 120
+    gm = GraphManager(uni, ev[:cut], L=64, k=2)
+    tmax = int(ev.time[cut - 1])
+    before = gm.get_snapshot(tmax)               # cached, crosses CURRENT
+    assert len(gm.cache) == 1
+    gm.update(ev[cut:])                          # live append (§6)
+    after = gm.get_snapshot(tmax)
+    truth = replay(uni, ev, tmax)
+    assert np.array_equal(after.node_mask, truth.node_mask)
+    assert np.array_equal(after.edge_mask, truth.edge_mask)
+
+
+# ------------------------------------------------- advised == cold property
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_advised_retrieval_equals_cold(seed):
+    """The advisor only changes *where plans start*, never what they
+    return: advised snapshots are bit-identical to cold ones."""
+    uni, ev = random_history(600, seed, n_attrs=2)
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    gm = GraphManager(uni, ev, L=48, k=2, diff_fn="balanced")
+    cold = GraphManager(uni, ev, L=48, k=2, diff_fn="balanced",
+                        cache_bytes=0)
+    gm.enable_advisor(budget_bytes=gm.pool.memory_bytes() + (256 << 10),
+                      replan_every=7)            # replan mid-stream on purpose
+    rng = np.random.default_rng(seed)
+    tmax = int(ev.time[-1]) if len(ev) else 0
+    for t in [int(x) for x in rng.integers(-2, tmax + 3, 25)]:
+        got = gm.get_snapshot(t, opts)
+        ref = cold.dg.get_snapshot(t, opts, pool=cold.pool)
+        truth = replay(uni, ev, t)
+        assert np.array_equal(got.node_mask, truth.node_mask), (seed, t)
+        assert np.array_equal(got.edge_mask, truth.edge_mask), (seed, t)
+        assert ref.equal(got), (seed, t, "advised != cold")
+
+
+# ------------------------------------------------------------- unit bits
+
+def test_workload_stats_decay_and_drift():
+    st = WorkloadStats(decay=0.5)
+    for _ in range(10):
+        st.record(0, 100.0)
+    snap = st.snapshot()
+    assert st.drift(snap) == 0.0
+    for _ in range(10):
+        st.record(7, 100.0)
+    assert st.drift(snap) > 0.5                  # mass moved to leaf 7
+    w = st.weights(8)
+    assert w[7] > w[0]
+
+
+def test_dominant_options_tracks_majority():
+    st = WorkloadStats()
+    a = parse_attr_options("", GraphManagerUniverseStub())
+    st.record(0, 1.0, NO_ATTRS)
+    opts = st.dominant_options()
+    assert opts.node_cols == () and opts.edge_cols == ()
+
+
+class GraphManagerUniverseStub:
+    num_node_attrs = 0
+    num_edge_attrs = 0
+    node_attr_cols: dict = {}
+    edge_attr_cols: dict = {}
+
+
+def test_execute_records_workload():
+    uni, ev, gm = _gm(cache_bytes=0)
+    assert gm.workload.num_queries == 0
+    gm.get_snapshot(int(ev.time[-1]) // 2)
+    assert gm.workload.num_queries == 1
+    assert gm.workload.total_plan_bytes > 0
+    # multipoint execution records one entry per time target
+    gm.dg.get_snapshots([int(ev.time[-1]) // 3, 2 * int(ev.time[-1]) // 3],
+                        pool=gm.pool)
+    assert gm.workload.num_queries == 3

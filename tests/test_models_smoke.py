@@ -17,6 +17,8 @@ from repro.models.transformer import model as tm
 from repro.training.optim import OPTIMIZERS
 from repro.training.trainer import make_train_step
 
+pytestmark = pytest.mark.slow  # reduced-config model steps still take seconds
+
 RNG = np.random.default_rng(0)
 KEY = jax.random.PRNGKey(0)
 
