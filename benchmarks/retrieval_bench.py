@@ -1,0 +1,145 @@
+"""BENCH_retrieval: batched multipoint retrieval vs sequential per-query
+retrieval at equal KV budget, with and without async prefetch.
+
+The workload is B concurrent snapshot queries at distinct timepoints (the
+"query stream" the batched engine exists for).  Three engines:
+
+* ``sequential``      — one singlepoint plan + execute per query (the
+  pre-IR engine's behaviour: identical prefixes re-fetched, re-applied);
+* ``batched``         — one merged Steiner-plan DAG (shared prefixes
+  fetch and apply once), host backend;
+* ``batched+prefetch``— same DAG with the async KV prefetcher overlapping
+  store gets with bitmap/state application.
+
+All engines run against the *same* store wrapped with a simulated remote
+round-trip latency (a Kyoto/Cassandra-style deployment; MemKV alone is
+nanoseconds and would hide the fetch economics the planner optimizes).
+Emits rows in the run.py contract and writes ``BENCH_retrieval.json``.
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.retrieval_bench --quick
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import GraphManager
+from repro.core.query import NO_ATTRS
+from repro.data.generators import churn_network
+from repro.runtime.executor import Prefetcher
+from repro.storage.kv import KVStore, MemKV
+
+OUT_JSON = "BENCH_retrieval.json"
+CONCURRENCY = 16          # timepoints per batch (the acceptance point)
+GET_LATENCY_US = 120.0    # simulated per-get remote RTT
+
+
+class LatencyKV(KVStore):
+    """Wraps a backend with a fixed per-get latency — the KV budget is
+    identical for every engine (same blobs, same per-get cost)."""
+
+    def __init__(self, inner: KVStore, get_latency_s: float) -> None:
+        super().__init__()
+        self.inner = inner
+        self.lat = float(get_latency_s)
+
+    def get(self, key):
+        time.sleep(self.lat)
+        v = self.inner.get(key)
+        self.stats.add_get(len(v))
+        return v
+
+    def put(self, key, value):
+        self.inner.put(key, value)
+        self.stats.add_put(len(value))
+
+    def delete(self, key):
+        self.inner.delete(key)
+
+    def __contains__(self, key):
+        return key in self.inner
+
+    def keys(self):
+        return self.inner.keys()
+
+
+def _batches(tmax: int, n_batches: int, seed: int = 0) -> list[list[int]]:
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(0, tmax + 1, CONCURRENCY)]
+            for _ in range(n_batches)]
+
+
+def bench_retrieval(quick: bool = False):
+    n = 4_000 if quick else 12_000
+    n_batches = 4 if quick else 10
+    uni, ev = churn_network(n_initial_edges=n // 12, n_events=n, seed=7)
+    L = max(n // 40, 64)
+    tmax = int(ev.time[-1])
+    batches = _batches(tmax, n_batches, seed=3)
+
+    store = LatencyKV(MemKV(), GET_LATENCY_US * 1e-6)
+    gm = GraphManager(uni, ev, store=store, L=L, k=2,
+                      diff_fn="intersection", cache_bytes=0)
+    dg, pool = gm.dg, gm.pool
+
+    def run(mode: str) -> dict:
+        store.stats.reset()
+        pf = Prefetcher(store, workers=8) if mode == "batched+prefetch" else None
+        t0 = time.perf_counter()
+        for batch in batches:
+            if mode == "sequential":
+                for t in batch:
+                    dg.get_snapshot(t, NO_ATTRS, pool=pool)
+            else:
+                dg.get_snapshots(batch, NO_ATTRS, pool=pool, prefetch=pf)
+        wall = time.perf_counter() - t0
+        if pf is not None:
+            pf.close()
+        q = sum(len(b) for b in batches)
+        return {"us_per_q": wall / q * 1e6, "wall_s": wall,
+                "kv_gets": store.stats.gets,
+                "kv_bytes_read": store.stats.bytes_read}
+
+    rows = []
+    report: dict = {"n_events": n, "concurrency": CONCURRENCY,
+                    "n_batches": n_batches,
+                    "kv_get_latency_us": GET_LATENCY_US, "engines": {}}
+    for mode in ("sequential", "batched", "batched+prefetch"):
+        res = run(mode)
+        report["engines"][mode] = res
+        rows.append((f"retrieval/{mode}", res["us_per_q"],
+                     dict(res, concurrency=CONCURRENCY)))
+
+    seq = report["engines"]["sequential"]
+    bat = report["engines"]["batched"]
+    pfx = report["engines"]["batched+prefetch"]
+    report["speedup_batched_vs_sequential"] = round(
+        seq["us_per_q"] / bat["us_per_q"], 3)
+    report["speedup_prefetch_vs_sequential"] = round(
+        seq["us_per_q"] / pfx["us_per_q"], 3)
+    report["speedup_prefetch_vs_batched"] = round(
+        bat["us_per_q"] / pfx["us_per_q"], 3)
+    report["kv_gets_saved_frac"] = round(
+        1.0 - bat["kv_gets"] / max(seq["kv_gets"], 1), 3)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("retrieval/report", 0.0, {"json": OUT_JSON}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_retrieval(quick=args.quick):
+        print(f"{name},{us:.1f},\"{json.dumps(derived)}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -65,11 +65,14 @@ def main():
     print(f"pool holds {gm.pool.num_active()-1} graphs, "
           f"{gm.pool.memory_bytes()/1e6:.1f} MB")
 
-    # straggler-aware fetch schedule demo over the partitioned store
+    # straggler-aware fetch schedule demo over the partitioned store; the
+    # plan IR carries exactly one Fetch node per payload, so the task set
+    # is duplicate-free by construction
+    from repro.core.planir import Fetch
     plan = gm.dg.plan_multipoint([int(t) for t in
                                   np.linspace(0, tmax, 16)], NO_ATTRS)
-    tasks = [FetchTask(p, (p, st.action[1], "struct"), 1000)
-             for st in plan.steps if st.action[0] in ("delta", "elist")
+    tasks = [FetchTask(p, (p, n.op.pid, "struct"), 1000)
+             for n in plan.nodes if isinstance(n.op, Fetch)
              for p in range(gm.dg.P)]
     sm = StragglerMitigator(tasks, hedge_frac=0.1)
     n = 0

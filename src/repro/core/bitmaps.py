@@ -58,6 +58,16 @@ def np_popcount(words: np.ndarray) -> int:
     return int(np.bitwise_count(np.asarray(words, np.uint32)).sum())
 
 
+def np_fit_words(words: np.ndarray, W: int) -> np.ndarray:
+    """Pad/trim packed words to width ``W`` (live updates grow slot
+    universes past older states/planes, §6 — one shared invariant for the
+    pool, the JAX executors, and anything else holding packed rows)."""
+    words = np.asarray(words, np.uint32)
+    if words.size < W:
+        return np.concatenate([words, np.zeros(W - words.size, np.uint32)])
+    return words[:W]
+
+
 # ---------------------------------------------------------------------------
 # jnp variants (query-time / jit)
 # ---------------------------------------------------------------------------

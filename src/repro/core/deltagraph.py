@@ -37,7 +37,12 @@ from . import diff_functions
 from .deltas import AttrDelta, Delta, apply_delta, state_diff
 from .events import (EV_DEL_EDGE, EV_DEL_NODE, EV_NEW_EDGE, EV_NEW_NODE,
                      EventList, GraphUniverse, MaterializedState, apply_events)
+from .planir import PlanBuilder, PlanIR
 from .query import NO_ATTRS, AttrOptions
+
+# every planner emits the unified retrieval-plan IR (core/planir.py);
+# ``Plan`` is kept as the public name for the emitted DAG
+Plan = PlanIR
 
 SUPERROOT = 0
 
@@ -92,24 +97,6 @@ class EdgeInfo:
             cols = [c for c in options.edge_cols if c < self.w_edgeattr.size]
             w += float(self.w_edgeattr[cols].sum())
         return w * frac
-
-
-# plan representation --------------------------------------------------------
-
-@dataclasses.dataclass
-class PlanStep:
-    key: Any                       # state key being produced
-    parent: Any | None             # state key consumed (None for sources)
-    action: tuple                  # see _execute
-    weight: float = 0.0
-
-
-@dataclasses.dataclass
-class Plan:
-    steps: list[PlanStep]
-    targets: dict[Any, Any]        # query target -> state key
-    total_weight: float
-    payload_fetches: int = 0
 
 
 class DeltaGraph:
@@ -579,6 +566,22 @@ class DeltaGraph:
                     heapq.heappush(pq, (nd, repr(v), v))
         return dist, prev
 
+    @staticmethod
+    def _emit_chain(b: PlanBuilder, prev: dict, src_action: dict,
+                    target: Any) -> None:
+        """Unwind a Dijkstra predecessor map from ``target`` back to a
+        source (or an already-emitted state) into the builder."""
+        chain = []
+        u = target
+        while u in prev and not b.has_state(u):
+            p, action, w = prev[u]
+            chain.append((u, p, action, w))
+            u = p
+        if not b.has_state(u):
+            b.source(u, src_action[u])
+        for key, parent, action, w in reversed(chain):
+            b.apply(key, parent, action, w)
+
     def plan_singlepoint(self, t: int, options: AttrOptions = NO_ATTRS,
                          use_current: bool = True) -> Plan:
         virtuals = {("t", t): self._virtual_edges(t, options)}
@@ -588,17 +591,10 @@ class DeltaGraph:
         target = ("t", t)
         if target not in dist:
             raise RuntimeError(f"no retrieval path for t={t}")
-        steps: list[PlanStep] = []
-        chain = []
-        u = target
-        while u in prev:
-            p, action, w = prev[u]
-            chain.append(PlanStep(u, p, action, w))
-            u = p
-        src_action = dict(sources)[u]
-        steps.append(PlanStep(u, None, src_action))
-        steps.extend(reversed(chain))
-        return Plan(steps, {t: target}, dist[target])
+        b = PlanBuilder()
+        self._emit_chain(b, prev, dict(sources), target)
+        b.target(t, target)
+        return b.build()
 
     def plan_node(self, nid: int, options: AttrOptions = NO_ATTRS) -> Plan:
         """Plan retrieval of a *skeleton* node's (virtual) graph — used for
@@ -606,16 +602,10 @@ class DeltaGraph:
         sources = self._sources(False, options)
         starts = {n: 0.0 for n, _ in sources}
         dist, prev = self._dijkstra(starts, options, {}, False)
-        steps: list[PlanStep] = []
-        chain = []
-        u = nid
-        while u in prev:
-            p, action, w = prev[u]
-            chain.append(PlanStep(u, p, action, w))
-            u = p
-        steps.append(PlanStep(u, None, dict(sources)[u]))
-        steps.extend(reversed(chain))
-        return Plan(steps, {("node", nid): nid}, dist.get(nid, 0.0))
+        b = PlanBuilder()
+        self._emit_chain(b, prev, dict(sources), nid)
+        b.target(("node", nid), nid)
+        return b.build()
 
     def plan_multipoint(self, times: Sequence[int],
                         options: AttrOptions = NO_ATTRS,
@@ -658,58 +648,58 @@ class DeltaGraph:
             tree_paths.append((a, b))
 
         # unfold: union of the chosen shortest paths as a directed step DAG
-        steps_by_key: dict[Any, PlanStep] = {}
-        order: list[Any] = []
         src_action = dict(sources)
+        builder = PlanBuilder()
 
         def add_path(run_key: Any, target: Any):
             _, prev = runs[run_key]
             chain = []
             u = target
-            while u in prev and u not in steps_by_key:
+            while u in prev and not builder.has_state(u):
                 p, action, w = prev[u]
-                chain.append(PlanStep(u, p, action, w))
+                chain.append((u, p, action, w))
                 u = p
-            if u not in steps_by_key:
+            if not builder.has_state(u):
                 if run_key == "SRC":
-                    steps_by_key[u] = PlanStep(u, None, src_action[u])
-                    order.append(u)
+                    builder.source(u, src_action[u])
                 else:
                     # path hangs off an already-computed state
-                    assert u == run_key or u in steps_by_key, u
-            for st in reversed(chain):
-                steps_by_key[st.key] = st
-                order.append(st.key)
+                    assert u == run_key, u
+            for key, parent, action, w in reversed(chain):
+                builder.apply(key, parent, action, w)
 
         for a, b in tree_paths:
             add_path(a, b)
 
-        steps = [steps_by_key[k] for k in order]
-        total = sum(s.weight for s in steps)
-        return Plan(steps, {t: ("t", t) for t in times}, total)
+        for t in times:
+            builder.target(t, ("t", t))
+        return builder.build()
 
     # ------------------------------------------------------------- execution
     def _mget(self, keys: list) -> list:
-        out = []
-        for k in keys:
-            try:
-                out.append(self.store.get(k))
-            except KeyError:
-                out.append(None)  # component created before this column existed
-        return out
+        from ..storage.kv import mget_optional
+        return mget_optional(self.store, keys)
 
-    def _fetch_delta(self, pid: int, options: AttrOptions) -> Delta:
+    def _delta_keys(self, pid: int, options: AttrOptions
+                    ) -> tuple[list, list, list]:
         keys = [(p, pid, col.STRUCT) for p in range(self.P)]
         na_keys = [(p, pid, f"{col.NODEATTR}.{c}")
                    for p in range(self.P) for c in options.node_cols]
         ea_keys = [(p, pid, f"{col.EDGEATTR}.{c}")
                    for p in range(self.P) for c in options.edge_cols]
+        return keys, na_keys, ea_keys
+
+    def _fetch_delta(self, pid: int, options: AttrOptions) -> Delta:
+        keys, na_keys, ea_keys = self._delta_keys(pid, options)
         blobs = self._mget(keys + na_keys + ea_keys)
-        structs = [col.decode_delta_struct(b) for b in blobs[: len(keys)]]
-        nas = [col.decode_attr(b) for b in blobs[len(keys): len(keys) + len(na_keys)]
-               if b is not None]
-        eas = [col.decode_attr(b) for b in blobs[len(keys) + len(na_keys):]
-               if b is not None]
+        return self._decode_delta(blobs, len(keys), len(na_keys))
+
+    def _decode_delta(self, blobs: list, n_struct: int, n_na: int) -> Delta:
+        structs = [col.decode_delta_struct(b) for b in blobs[:n_struct]]
+        na_blobs = blobs[n_struct: n_struct + n_na]
+        ea_blobs = blobs[n_struct + n_na:]
+        nas = [col.decode_attr(b) for b in na_blobs if b is not None]
+        eas = [col.decode_attr(b) for b in ea_blobs if b is not None]
 
         def cat(field):
             return np.concatenate([s[field] for s in structs]) if structs else np.zeros(0, np.int32)
@@ -725,16 +715,24 @@ class DeltaGraph:
         return Delta(cat("node_add"), cat("node_del"), cat("edge_add"),
                      cat("edge_del"), cat_attr(nas), cat_attr(eas))
 
-    def _fetch_elist(self, pid: int, options: AttrOptions,
-                     transient: bool = False) -> dict[str, dict[str, np.ndarray]]:
-        out: dict[str, list[dict[str, np.ndarray]]] = {}
+    def _elist_keys(self, pid: int, options: AttrOptions,
+                    transient: bool = False) -> list:
         comps = [col.ELIST_STRUCT]
         comps += [f"{col.ELIST_NODEATTR}.{c}" for c in options.node_cols]
         comps += [f"{col.ELIST_EDGEATTR}.{c}" for c in options.edge_cols]
         if transient:
             comps.append(col.ELIST_TRANSIENT)
-        keys = [(p, pid, c) for p in range(self.P) for c in comps]
-        blobs = self._mget(keys)
+        return [(p, pid, c) for p in range(self.P) for c in comps]
+
+    def _fetch_elist(self, pid: int, options: AttrOptions,
+                     transient: bool = False) -> dict[str, dict[str, np.ndarray]]:
+        keys = self._elist_keys(pid, options, transient)
+        return self._decode_elist(keys, self._mget(keys))
+
+    @staticmethod
+    def _decode_elist(keys: list, blobs: list
+                      ) -> dict[str, dict[str, np.ndarray]]:
+        out: dict[str, list[dict[str, np.ndarray]]] = {}
         for (pkey, blob) in zip(keys, blobs):
             if blob is not None:
                 out.setdefault(pkey[2], []).append(col.unpack_arrays(blob))
@@ -789,56 +787,25 @@ class DeltaGraph:
         return out
 
     def execute(self, plan: Plan, options: AttrOptions = NO_ATTRS,
-                pool=None) -> dict[Any, MaterializedState]:
-        """Run a plan; returns states for plan.targets' keys."""
+                pool=None, prefetch=None) -> dict[Any, MaterializedState]:
+        """Run a plan IR on the host backend; returns states keyed by the
+        plan's query targets.  ``prefetch`` takes a
+        :class:`repro.runtime.executor.Prefetcher` to overlap KV gets with
+        delta/eventlist application."""
+        from ..runtime.executor import HostExecutor
         t_start = time.perf_counter()
-        states: dict[Any, MaterializedState] = {}
-        for step in plan.steps:
-            kind = step.action[0]
-            if kind == "empty":
-                st = MaterializedState.empty(self.universe)
-            elif kind == "mat":
-                assert pool is not None, "materialized plan needs a GraphPool"
-                st = pool.get_state(step.action[1], with_attrs=options.wants_attrs)
-            elif kind == "current":
-                base = self._last_leaf_state.resized(self.universe).copy()
-                st = apply_events(base, self.recent, forward=True)
-            elif kind == "delta":
-                d = self._fetch_delta(step.action[1], options)
-                st = apply_delta(states[step.parent].resized(self.universe),
-                                 d, forward=step.action[2])
-            elif kind == "elist":
-                _, pid, fwd, rng = step.action
-                comps = self._fetch_elist(pid, options)
-                st = self._apply_elist(states[step.parent].resized(self.universe),
-                                       comps, fwd, rng, options)
-            elif kind == "recent":
-                _, _, fwd, rng = step.action
-                base = states[step.parent].resized(self.universe)
-                ev = self.recent
-                if rng is not None:
-                    lo, hi = rng
-                    a = ev.search_time(lo, side="right")
-                    b = ev.search_time(hi, side="right")
-                    ev = ev[a:b]
-                st = apply_events(base, ev, forward=fwd)
-            elif kind == "noop":
-                st = states[step.parent].copy()
-            else:  # pragma: no cover
-                raise ValueError(f"unknown action {step.action}")
-            states[step.key] = st
-        out = {}
-        for tgt, key in plan.targets.items():
-            st = states[key]
-            st.node_mask &= ~self.universe.node_transient[: st.node_mask.size]
-            st.edge_mask &= ~self.universe.edge_transient[: st.edge_mask.size]
-            out[tgt] = st
+        out = HostExecutor(self, prefetcher=prefetch).run(plan, options, pool)
         if self.workload is not None:
             # time-point targets only (node-materialization plans carry
-            # ("node", nid) targets and are not workload)
+            # ("node", nid) targets and are not workload — recording their
+            # routes would let the advisor reinforce its own pins)
             tts = [t for t in plan.targets
                    if isinstance(t, (int, np.integer))]
             if tts:
+                # per-IR-node hit counts feed the advisor candidate ranking
+                self.workload.record_nodes(
+                    [k for k in plan.state_keys()
+                     if isinstance(k, (int, np.integer)) and k in self.nodes])
                 wall = (time.perf_counter() - t_start) / len(tts)
                 share = plan.total_weight / len(tts)
                 for t in tts:
@@ -848,15 +815,19 @@ class DeltaGraph:
 
     # --------------------------------------------------------------- queries
     def get_snapshot(self, t: int, options: AttrOptions = NO_ATTRS,
-                     pool=None, use_current: bool = True) -> MaterializedState:
+                     pool=None, use_current: bool = True,
+                     prefetch=None) -> MaterializedState:
         plan = self.plan_singlepoint(t, options, use_current)
-        return self.execute(plan, options, pool)[t]
+        return self.execute(plan, options, pool, prefetch=prefetch)[t]
 
     def get_snapshots(self, times: Sequence[int],
                       options: AttrOptions = NO_ATTRS, pool=None,
-                      use_current: bool = True) -> dict[int, MaterializedState]:
+                      use_current: bool = True,
+                      prefetch=None) -> dict[int, MaterializedState]:
+        """Batched multipoint retrieval: one Steiner plan, shared prefixes
+        fetch and apply once (§4.4 multi-query optimization)."""
         plan = self.plan_multipoint(times, options, use_current)
-        return self.execute(plan, options, pool)
+        return self.execute(plan, options, pool, prefetch=prefetch)
 
     def get_interval(self, ts: int, te: int) -> dict[str, np.ndarray]:
         """GetHistGraphInterval: elements *added* during [ts, te), plus the

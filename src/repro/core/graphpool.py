@@ -134,50 +134,76 @@ class GraphPool:
     def insert_snapshot(self, state: MaterializedState) -> int:
         """Overlay a retrieved historical snapshot (bit pair + dependency
         optimization)."""
-        self._ensure_universe()
-        nbm = bm.np_pack(state.node_mask)
-        ebm = bm.np_pack(state.edge_mask)
-        nbm = self._fit(nbm, self.Wn)
-        ebm = self._fit(ebm, self.We)
-        live = int(bm.np_popcount(nbm) + bm.np_popcount(ebm))
+        return self.insert_snapshots([state])[0]
 
-        # candidate dependency parents: current graph + materialized graphs
-        best: tuple[int, int] | None = None  # (diff, gid)
+    def insert_snapshots(self, states: list[MaterializedState]) -> list[int]:
+        """Batched overlay: allocate every bit pair in one pass, then write
+        the ``B`` snapshots' planes — the landing step of the batched
+        retrieval engine (one pool pass per query batch, not per query)."""
+        self._ensure_universe()
+        packed = []
+        for st in states:
+            packed.append((self._fit(bm.np_pack(st.node_mask), self.Wn),
+                           self._fit(bm.np_pack(st.edge_mask), self.We)))
+        return self._insert_packed(packed, states)
+
+    def insert_snapshots_packed(self, pairs: list[tuple[np.ndarray, np.ndarray]]
+                                ) -> list[int]:
+        """Batched overlay of already-packed ``(node_words, edge_words)``
+        bitmaps (the JAX executor lands device results here without an
+        unpack/re-pack round-trip).  No attribute columns are stored."""
+        self._ensure_universe()
+        packed = [(self._fit(np.asarray(n, np.uint32), self.Wn),
+                   self._fit(np.asarray(e, np.uint32), self.We))
+                  for n, e in pairs]
+        return self._insert_packed(packed, [None] * len(packed))
+
+    def _insert_packed(self, packed: list[tuple[np.ndarray, np.ndarray]],
+                       states: list[MaterializedState | None]) -> list[int]:
+        bits = self._alloc_bits(2 * len(packed))
+        gids = []
+        # snapshot the dependency candidates once per batch (current +
+        # materialized graphs; batch members don't depend on each other)
+        cands = []
         for gid, e in self.table.items():
             if e.released or e.kind == "historical":
                 continue
             pn, pe = self._resolve_masks(gid)
-            diff = int(bm.np_popcount(pn ^ nbm) + bm.np_popcount(pe ^ ebm))
-            if best is None or diff < best[0]:
-                best = (diff, gid)
-
-        b_same, b_own = self._alloc_bits(2)
-        gid = self._next_gid
-        self._next_gid += 1
-        if best is not None and best[0] < self.DEP_THRESHOLD * max(live, 1):
-            dep = best[1]
-            pn, pe = self._resolve_masks(dep)
-            self.node_planes[b_same] = ~(pn ^ nbm)   # 1 = same as parent
-            self.edge_planes[b_same] = ~(pe ^ ebm)
-            self.node_planes[b_own] = nbm & (pn ^ nbm)
-            self.edge_planes[b_own] = ebm & (pe ^ ebm)
-            self.overlay_ops += best[0]
-            entry = PoolEntry(gid, "historical", (b_same, b_own), dep_gid=dep)
-        else:
-            self.node_planes[b_same] = 0  # same-as-parent nowhere
-            self.edge_planes[b_same] = 0
-            self.node_planes[b_own] = nbm
-            self.edge_planes[b_own] = ebm
-            self.overlay_ops += live
-            entry = PoolEntry(gid, "historical", (b_same, b_own))
-        self._store_attrs(entry, state)
-        self.table[gid] = entry
-        return gid
+            cands.append((gid, pn, pe))
+        for i, ((nbm, ebm), state) in enumerate(zip(packed, states)):
+            live = int(bm.np_popcount(nbm) + bm.np_popcount(ebm))
+            best: tuple[int, int] | None = None  # (diff, candidate index)
+            for ci, (gid, pn, pe) in enumerate(cands):
+                diff = int(bm.np_popcount(pn ^ nbm) + bm.np_popcount(pe ^ ebm))
+                if best is None or diff < best[0]:
+                    best = (diff, ci)
+            b_same, b_own = bits[2 * i], bits[2 * i + 1]
+            gid = self._next_gid
+            self._next_gid += 1
+            if best is not None and best[0] < self.DEP_THRESHOLD * max(live, 1):
+                dep, pn, pe = cands[best[1]]
+                self.node_planes[b_same] = ~(pn ^ nbm)   # 1 = same as parent
+                self.edge_planes[b_same] = ~(pe ^ ebm)
+                self.node_planes[b_own] = nbm & (pn ^ nbm)
+                self.edge_planes[b_own] = ebm & (pe ^ ebm)
+                self.overlay_ops += best[0]
+                entry = PoolEntry(gid, "historical", (b_same, b_own),
+                                  dep_gid=dep)
+            else:
+                self.node_planes[b_same] = 0  # same-as-parent nowhere
+                self.edge_planes[b_same] = 0
+                self.node_planes[b_own] = nbm
+                self.edge_planes[b_own] = ebm
+                self.overlay_ops += live
+                entry = PoolEntry(gid, "historical", (b_same, b_own))
+            if state is not None:
+                self._store_attrs(entry, state)
+            self.table[gid] = entry
+            gids.append(gid)
+        return gids
 
     def _fit(self, words: np.ndarray, W: int) -> np.ndarray:
-        if words.size < W:
-            return np.concatenate([words, np.zeros(W - words.size, np.uint32)])
-        return words[:W]
+        return bm.np_fit_words(words, W)
 
     def _write_plane(self, b: int, state: MaterializedState) -> None:
         self.node_planes[b] = self._fit(bm.np_pack(state.node_mask), self.Wn)

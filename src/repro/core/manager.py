@@ -115,7 +115,8 @@ class GraphManager:
                  num_partitions: int = 1,
                  partition_fn: str = "word_cyclic",
                  cache_bytes: int = 32 << 20,
-                 cache_entries: int = 256) -> None:
+                 cache_entries: int = 256,
+                 prefetch_workers: int = 4) -> None:
         self.universe = universe
         self.store = store if store is not None else MemKV()
         self.dg = DeltaGraph(universe, self.store, L=L, k=k, diff_fn=diff_fn,
@@ -132,15 +133,38 @@ class GraphManager:
         self.cache = (SnapshotCache(cache_bytes, cache_entries)
                       if cache_bytes > 0 else None)
         self.advisor: MaterializationAdvisor | None = None
+        # async KV prefetch for batched retrieval (runtime/executor.py);
+        # threads spin up lazily on first batched query
+        if prefetch_workers > 0:
+            from ..runtime.executor import Prefetcher
+            self.prefetcher = Prefetcher(self.store, workers=prefetch_workers)
+        else:
+            self.prefetcher = None
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Shut down the prefetch thread pool (idempotent; threads only
+        exist if a batched retrieval ran)."""
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+
+    def __enter__(self) -> "GraphManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------- retrieval
+    def _parse_opts(self, attr_options: str | AttrOptions) -> AttrOptions:
+        return (attr_options if isinstance(attr_options, AttrOptions)
+                else parse_attr_options(attr_options, self.universe))
+
     def get_snapshot(self, t: int, attr_options: str | AttrOptions = "",
                      use_current: bool = True) -> MaterializedState:
         """Singlepoint retrieval through the snapshot cache (exact-timepoint
         LRU) with the advisor's online replan hook.  Results are always
         bit-identical to a cold ``DeltaGraph.get_snapshot``."""
-        opts = (attr_options if isinstance(attr_options, AttrOptions)
-                else parse_attr_options(attr_options, self.universe))
+        opts = self._parse_opts(attr_options)
         key = (SnapshotCache.key(t, opts, use_current)
                if self.cache is not None else None)
         if self.cache is not None:
@@ -148,13 +172,48 @@ class GraphManager:
             if hit is not None:
                 self.workload.record_cache_hit()
                 return hit
-        st = self.dg.get_snapshot(t, opts, pool=self.pool,
-                                  use_current=use_current)
+        plan = self.dg.plan_singlepoint(t, opts, use_current)
+        st = self.dg.execute(plan, opts, pool=self.pool)[t]
         if self.cache is not None:
-            self.cache.put(key, st)
+            self.cache.put(key, st, deps=plan.source_nids())
         if self.advisor is not None:
             self.advisor.on_query()
         return st
+
+    def get_snapshots(self, times: Sequence[int],
+                      attr_options: str | AttrOptions = "",
+                      use_current: bool = True
+                      ) -> dict[int, MaterializedState]:
+        """Batched multipoint retrieval (§4.4): cache hits are split off,
+        the misses become **one** Steiner plan whose shared prefixes fetch
+        and apply once, executed with async KV prefetch."""
+        opts = self._parse_opts(attr_options)
+        times = [int(t) for t in dict.fromkeys(int(t) for t in times)]
+        out: dict[int, MaterializedState] = {}
+        misses: list[int] = []
+        for t in times:
+            if self.cache is not None:
+                hit = self.cache.get(SnapshotCache.key(t, opts, use_current))
+                if hit is not None:
+                    self.workload.record_cache_hit()
+                    out[t] = hit
+                    continue
+            misses.append(t)
+        if misses:
+            plan = self.dg.plan_multipoint(misses, opts, use_current)
+            states = self.dg.execute(plan, opts, pool=self.pool,
+                                     prefetch=self.prefetcher)
+            # per-target deps: only the pins on a target's own branch
+            # invalidate its entry, not every pin the batch touched
+            deps = plan.per_target_source_nids()
+            for t in misses:
+                out[t] = states[t]
+                if self.cache is not None:
+                    self.cache.put(SnapshotCache.key(t, opts, use_current),
+                                   states[t], deps=deps.get(t))
+            if self.advisor is not None:
+                self.advisor.on_query(n=len(misses))
+        return out
 
     def get_hist_graph(self, t: int, attr_options: str = "",
                        use_current: bool = True) -> HistGraph:
@@ -165,13 +224,12 @@ class GraphManager:
 
     def get_hist_graphs(self, times: Sequence[int],
                         attr_options: str = "") -> list[HistGraph]:
+        """Batched retrieval + one batched GraphPool overlay pass."""
         opts = parse_attr_options(attr_options, self.universe)
-        states = self.dg.get_snapshots(list(times), opts, pool=self.pool)
-        out = []
-        for t in times:
-            gid = self.pool.insert_snapshot(states[t])
-            out.append(HistGraph(self, gid, t, opts))
-        return out
+        states = self.get_snapshots(list(times), opts)
+        gids = self.pool.insert_snapshots([states[int(t)] for t in times])
+        return [HistGraph(self, gid, int(t), opts)
+                for gid, t in zip(gids, times)]
 
     def get_hist_graph_expr(self, tex: TimeExpression,
                             attr_options: str = "") -> MaterializedState:
@@ -179,7 +237,7 @@ class GraphManager:
         element set satisfying the expression; attributes come from the
         latest queried time point at which the element exists."""
         opts = parse_attr_options(attr_options, self.universe)
-        states = self.dg.get_snapshots(list(tex.times), opts, pool=self.pool)
+        states = self.get_snapshots(list(tex.times), opts)
         ordered = [states[t] for t in tex.times]
         nmask = tex.evaluate([s.node_mask for s in ordered])
         emask = tex.evaluate([s.edge_mask for s in ordered])
@@ -227,15 +285,24 @@ class GraphManager:
         self.advisor = MaterializationAdvisor(self.dg, self.pool,
                                               self.workload, cfg,
                                               rates=self.rates)
+        self.advisor.on_evict = self._on_advisor_evict
         return self.advisor.replan() if warm_start else None
+
+    def _on_advisor_evict(self, nids: list[int]) -> None:
+        """A replan evicted pins: cache entries whose plans routed through
+        them hold stale ``materialized_as`` sources — drop them."""
+        if self.cache is not None and nids:
+            self.cache.invalidate_deps(nids)
 
     def disable_advisor(self) -> None:
         """Evict every advisor pin and stop re-planning."""
         if self.advisor is None:
             return
-        for nid in list(self.advisor.pinned):
+        evicted = list(self.advisor.pinned)
+        for nid in evicted:
             self.dg.unmaterialize(nid, self.pool)
         self.pool.cleaner(force=True)
+        self._on_advisor_evict(evicted)
         self.advisor = None
 
     def materialize_roots(self, depth: int = 1) -> list[int]:

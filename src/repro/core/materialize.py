@@ -72,6 +72,7 @@ class WorkloadStats:
         # raw counts are amplified by a running boost (1/decay per record)
         # so decay is O(1) per query; effective weight = raw / boost
         self._raw: dict[int, float] = {}
+        self._raw_nodes: dict[int, float] = {}
         self._boost = 1.0
         self.opt_count: dict[tuple, int] = {}
         self.num_queries = 0
@@ -83,6 +84,14 @@ class WorkloadStats:
     def leaf_weight(self) -> dict[int, float]:
         return {k: v / self._boost for k, v in self._raw.items()}
 
+    @property
+    def node_hits(self) -> dict[int, float]:
+        """Decayed per-IR-node hit counts: how often each skeleton node
+        appeared in an executed plan DAG.  The advisor ranks its candidate
+        pool by these — a node the planner actually routes through is a
+        better pin than one merely high in the hierarchy."""
+        return {k: v / self._boost for k, v in self._raw_nodes.items()}
+
     # -- recording -----------------------------------------------------------
     def record(self, leaf_index: int, plan_bytes: float,
                options: AttrOptions = NO_ATTRS,
@@ -91,6 +100,8 @@ class WorkloadStats:
         if self._boost > 1e12:  # renormalize before float64 overflow
             for k in self._raw:
                 self._raw[k] /= self._boost
+            for k in self._raw_nodes:
+                self._raw_nodes[k] /= self._boost
             self._boost = 1.0
         self._raw[leaf_index] = self._raw.get(leaf_index, 0.0) + self._boost
         key = (options.node_cols, options.edge_cols)
@@ -101,6 +112,12 @@ class WorkloadStats:
 
     def record_cache_hit(self) -> None:
         self.cache_hits += 1
+
+    def record_nodes(self, nids: Iterable[int]) -> None:
+        """Record the skeleton nodes one executed plan DAG routed through
+        (called by :meth:`DeltaGraph.execute`, once per plan)."""
+        for nid in nids:
+            self._raw_nodes[nid] = self._raw_nodes.get(nid, 0.0) + self._boost
 
     # -- reads ---------------------------------------------------------------
     def weights(self, num_leaves: int) -> np.ndarray:
@@ -157,6 +174,7 @@ class SnapshotCache:
         self.max_bytes = int(max_bytes)
         self.max_entries = int(max_entries)
         self._d: OrderedDict[tuple, "MaterializedState"] = OrderedDict()
+        self._deps: dict[tuple, frozenset] = {}   # key -> skeleton nids used
         self._bytes = 0
         self.hits = 0
         self.misses = 0
@@ -174,13 +192,19 @@ class SnapshotCache:
         self.hits += 1
         return st.copy()
 
-    def put(self, key: tuple, st: "MaterializedState") -> None:
+    def put(self, key: tuple, st: "MaterializedState",
+            deps: "frozenset | set | None" = None) -> None:
+        """``deps`` are the materialized skeleton nids the producing plan
+        routed through; :meth:`invalidate_deps` drops the entry when one of
+        them is evicted (its ``materialized_as`` id goes stale)."""
         nb = _state_nbytes(st)
         if nb > self.max_bytes:
             return
         if key in self._d:
             self._evict_key(key)
         self._d[key] = st.copy()
+        if deps:
+            self._deps[key] = frozenset(deps)
         self._bytes += nb
         while self._d and (self._bytes > self.max_bytes
                            or len(self._d) > self.max_entries):
@@ -188,7 +212,18 @@ class SnapshotCache:
 
     def _evict_key(self, key: tuple) -> None:
         st = self._d.pop(key)
+        self._deps.pop(key, None)
         self._bytes -= _state_nbytes(st)
+
+    def invalidate_deps(self, nids) -> int:
+        """Drop entries whose plan routed through any of the given skeleton
+        nodes (called when the advisor evicts pins: the recorded
+        ``materialized_as`` sources no longer exist)."""
+        nids = set(nids)
+        dead = [k for k, deps in self._deps.items() if deps & nids]
+        for k in dead:
+            self._evict_key(k)
+        return len(dead)
 
     def invalidate_from(self, t: int) -> int:
         """Drop entries at or after time ``t`` — plus every entry whose plan
@@ -201,6 +236,7 @@ class SnapshotCache:
 
     def clear(self) -> None:
         self._d.clear()
+        self._deps.clear()
         self._bytes = 0
 
     def nbytes(self) -> int:
@@ -250,6 +286,10 @@ class MaterializationAdvisor:
         self.rates = rates
         self.config = config or AdvisorConfig()
         self.pinned: dict[int, int] = {}      # nid -> pool gid (advisor-owned)
+        # called with the list of evicted nids after every apply();
+        # GraphManager wires this to SnapshotCache.invalidate_deps so cache
+        # entries whose plans routed through an evicted pin are dropped
+        self.on_evict = None
         self.last_advice: Advice | None = None
         self._hist_at_plan: dict[int, float] = {}
         self._since_replan = 0
@@ -287,11 +327,14 @@ class MaterializationAdvisor:
         return dist
 
     def _candidates(self) -> list[int]:
-        """Interior skeleton nodes, top levels first (biggest fan-out
-        shadow); capped at ``max_candidates``."""
+        """Interior skeleton nodes ranked by observed per-IR-node traffic
+        (nodes real plans route through first), level as tie-break (biggest
+        fan-out shadow); capped at ``max_candidates``."""
+        hits = self.stats.node_hits
         cand = [nid for nid, info in self.dg.nodes.items()
                 if info.kind == "interior"]
-        cand.sort(key=lambda nid: -self.dg.nodes[nid].level)
+        cand.sort(key=lambda nid: (-hits.get(nid, 0.0),
+                                   -self.dg.nodes[nid].level))
         return cand[: self.config.max_candidates]
 
     # -- planning ------------------------------------------------------------
@@ -376,9 +419,11 @@ class MaterializationAdvisor:
         budget = (self.config.budget_bytes if budget_bytes is None
                   else int(budget_bytes))
         options = self.stats.dominant_options()
+        evicted_now: list[int] = []
         for nid in advice.evicted:
             self.dg.unmaterialize(nid, self.pool)
             self.pinned.pop(nid, None)
+            evicted_now.append(nid)
         # kept pins whose stored columns no longer cover the dominant
         # options are useless as plan sources — re-pin with fresh columns
         for nid in advice.chosen:
@@ -389,6 +434,7 @@ class MaterializationAdvisor:
                         <= set(info.mat_edge_cols or ())):
                     self.dg.unmaterialize(nid, self.pool)
                     self.pinned.pop(nid, None)
+                    evicted_now.append(nid)
                     advice.added.append(nid)
         self.pool.cleaner(force=True)
         for nid in advice.added:
@@ -402,11 +448,14 @@ class MaterializationAdvisor:
                 self.dg.unmaterialize(nid, self.pool)
                 self.pool.cleaner(force=True)
                 self.pinned.pop(nid, None)
+                evicted_now.append(nid)
                 break
         # chosen reports what actually got pinned (rollback may truncate)
         advice.chosen = [c for c in advice.chosen if c in self.pinned]
         advice.added = [c for c in advice.added if c in self.pinned]
         advice.pool_bytes_after = self.pool.memory_bytes()
+        if self.on_evict is not None and evicted_now:
+            self.on_evict([n for n in evicted_now if n not in self.pinned])
         self.last_advice = advice
         self._hist_at_plan = self.stats.snapshot()
         self._since_replan = 0
@@ -416,11 +465,13 @@ class MaterializationAdvisor:
         return self.apply(self.plan(budget_bytes), budget_bytes)
 
     # -- online hook ---------------------------------------------------------
-    def on_query(self) -> Advice | None:
+    def on_query(self, n: int = 1) -> Advice | None:
         """Called by GraphManager after each retrieval; replans every
         ``replan_every`` queries, or immediately when the histogram has
-        drifted past ``drift_threshold`` since the last plan."""
-        self._since_replan += 1
+        drifted past ``drift_threshold`` since the last plan.  Batched
+        retrievals pass ``n`` = number of queries served so the replan
+        cadence is per-query, not per-batch."""
+        self._since_replan += int(n)
         if self._since_replan < self.config.replan_every:
             if (self.pinned
                     and self.stats.drift(self._hist_at_plan)

@@ -1,1 +1,2 @@
-from .ops import delta_apply_chain, delta_apply_chain_ref  # noqa: F401
+from .ops import (delta_apply_chain, delta_apply_chain_batched,  # noqa: F401
+                  delta_apply_chain_ref)

@@ -7,6 +7,7 @@ snapshot-retrieval engine, and as the oracle).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from .delta_apply import delta_apply_chain_pallas
@@ -21,4 +22,24 @@ def delta_apply_chain(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray,
     if impl == "pallas":
         return delta_apply_chain_pallas(base, adds, dels, block_w=block_w,
                                         interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def delta_apply_chain_batched(bases: jnp.ndarray, adds: jnp.ndarray,
+                              dels: jnp.ndarray, *, impl: str = "xla",
+                              block_w: int = 1024,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Vmapped multi-snapshot apply: ``B`` sibling chains in one call.
+
+    ``bases [B, W]``, ``adds/dels [B, K, W]`` (chains zero-padded to a
+    common ``K``; an all-zero ``(adds, dels)`` row is the identity step).
+    Sibling branches after a plan Fork execute as one batched pass — one
+    kernel launch and one sweep over the stacked bit-planes instead of
+    ``B`` sequential chain calls.
+    """
+    if impl == "xla":
+        return jax.vmap(delta_apply_chain_ref)(bases, adds, dels)
+    if impl == "pallas":
+        return jax.vmap(lambda b, a, d: delta_apply_chain_pallas(
+            b, a, d, block_w=block_w, interpret=interpret))(bases, adds, dels)
     raise ValueError(f"unknown impl {impl!r}")

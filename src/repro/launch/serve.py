@@ -22,9 +22,14 @@ from ..models import common as mc
 
 
 def serve_snapshots(n_events: int, budget_mb: float, queries: int,
-                    zipf: float, seed: int = 0) -> None:
+                    zipf: float, seed: int = 0, batch: int = 1) -> None:
     """Drive a recency-skewed snapshot workload and report cold vs advised
-    latency plus cache hit rate — the quickstart for the advisor."""
+    latency plus cache hit rate — the quickstart for the advisor.
+
+    ``batch > 1`` groups concurrent queries into ``get_snapshots`` calls:
+    one merged multipoint plan per group (shared prefixes fetch and apply
+    once) executed with async KV prefetch — the serving configuration for
+    a query *stream* rather than a query at a time."""
     from ..core import GraphManager
     from ..data.generators import churn_network
 
@@ -39,20 +44,24 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
         1, distinct.size, queries)
     ts = distinct[distinct.size - 1 - np.minimum(ranks, distinct.size - 1)]
 
-    cold = GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
-                        diff_fn="intersection", cache_bytes=0)
-    t0 = time.perf_counter()
-    for t in ts:
-        cold.dg.get_snapshot(int(t), pool=cold.pool)
-    cold_s = time.perf_counter() - t0
+    with GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
+                      diff_fn="intersection", cache_bytes=0) as cold:
+        t0 = time.perf_counter()
+        for t in ts:
+            cold.dg.get_snapshot(int(t), pool=cold.pool)
+        cold_s = time.perf_counter() - t0
 
     gm = GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
                       diff_fn="intersection")
     advice = gm.enable_advisor(budget_bytes=int(budget_mb * 2**20),
                                replan_every=max(queries // 8, 32))
     t0 = time.perf_counter()
-    for t in ts:
-        gm.get_snapshot(int(t))
+    if batch > 1:
+        for i in range(0, len(ts), batch):
+            gm.get_snapshots([int(t) for t in ts[i:i + batch]])
+    else:
+        for t in ts:
+            gm.get_snapshot(int(t))
     adv_s = time.perf_counter() - t0
 
     q = len(ts)
@@ -67,6 +76,7 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
     if advice is not None:
         print(f"warm-start expected saving: {advice.expected_saved_bytes:.0f}"
               f" / {advice.expected_cold_bytes:.0f} plan-bytes")
+    gm.close()
 
 
 def serve_lm(arch: str, batch: int, prompt_len: int, gen: int) -> None:
@@ -144,9 +154,13 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=2_000)
     ap.add_argument("--zipf", type=float, default=1.3,
                     help="snapshots mode: recency skew (<=1 → uniform)")
+    ap.add_argument("--multipoint-batch", type=int, default=1,
+                    help="snapshots mode: merge this many concurrent "
+                         "queries into one batched get_snapshots plan")
     args = ap.parse_args()
     if args.mode == "snapshots":
-        serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf)
+        serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
+                        batch=args.multipoint_batch)
     elif family_of(args.arch) == "recsys":
         serve_din(args.batch)
     else:

@@ -129,10 +129,10 @@ class StragglerMitigator:
 
     def complete(self, key: Any) -> bool:
         """Returns True if this completion is the first for the task."""
+        self.outstanding.pop(key, None)
         if key in self.done:
             return False
         self.done.add(key)
-        self.outstanding.pop(key, None)
         return True
 
     def finished(self) -> bool:

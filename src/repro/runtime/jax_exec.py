@@ -29,16 +29,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compat
 from ..core import bitmaps as bmod
+from ..core import planir
 from ..core.deltagraph import DeltaGraph, Plan
 from ..core.events import (EV_DEL_EDGE, EV_DEL_NODE, EV_NEW_EDGE, EV_NEW_NODE)
 from ..core.query import NO_ATTRS
-from ..kernels import delta_apply_chain
+from ..kernels import delta_apply_chain, delta_apply_chain_batched
 from ..storage import columnar as col
 
 
 # ---------------------------------------------------------------------------
 # plan → (adds, dels) index pairs
 # ---------------------------------------------------------------------------
+
+_fit_words = bmod.np_fit_words
 
 def _elist_pair(comps, forward: bool, rng) -> tuple[np.ndarray, ...]:
     s = comps[col.ELIST_STRUCT]
@@ -94,10 +97,10 @@ def plan_to_chain(dg: DeltaGraph, plan: Plan, pool=None
         base_e = np.zeros(bmod.num_words(U_e), np.uint32)
     elif src.action[0] == "mat":
         base_n, base_e = pool._resolve_masks(src.action[1])
-        base_n = np.asarray(base_n)
-        base_e = np.asarray(base_e)
+        base_n = _fit_words(base_n, bmod.num_words(U_n))
+        base_e = _fit_words(base_e, bmod.num_words(U_e))
     elif src.action[0] == "current":
-        st = dg._last_leaf_state
+        st = dg._last_leaf_state.resized(dg.universe)
         base_n = bmod.np_pack(st.node_mask)
         base_e = bmod.np_pack(st.edge_mask)
         na, nd, ea, ed = _recent_pair(dg, True, None)
@@ -155,6 +158,214 @@ def execute_singlepoint_jax(dg: DeltaGraph, t: int, *, impl: str = "xla",
     em &= ~dg.universe.edge_transient[:U_e]
     nm &= ~dg.universe.node_transient[:U_n]
     return nm, em
+
+
+# ---------------------------------------------------------------------------
+# IR DAG execution: vmapped multi-snapshot apply
+# ---------------------------------------------------------------------------
+
+_EMPTY_PAIR = (np.zeros(0, np.int32),) * 4
+
+
+def _node_pair(dg: DeltaGraph, op, get_payload) -> tuple[np.ndarray, ...]:
+    """Lower one apply op to an ``(n_add, n_del, e_add, e_del)`` index
+    quadruple; payloads come through ``get_payload`` (memoized per pid,
+    possibly prefetched)."""
+    if isinstance(op, planir.ApplyDelta):
+        d = get_payload("delta", op.pid)
+        if op.forward:
+            return d.node_add, d.node_del, d.edge_add, d.edge_del
+        return d.node_del, d.node_add, d.edge_del, d.edge_add
+    if isinstance(op, planir.ApplyElist):
+        return _elist_pair(get_payload("elist", op.pid), op.forward, op.rng)
+    if isinstance(op, planir.ApplyRecent):
+        return _recent_pair(dg, op.forward, op.rng)
+    if isinstance(op, planir.Noop):
+        return _EMPTY_PAIR
+    raise ValueError(f"not an apply op: {op}")  # pragma: no cover
+
+
+def _make_payload_resolver(dg: DeltaGraph, ir: Plan, prefetch):
+    """Memoized payload access for the structure-only backend; with a
+    Prefetcher, every Fetch node's (small, struct-component) key list is
+    submitted up front so store gets overlap kernel execution."""
+    futs: dict[tuple, Any] = {}
+    keymeta: dict[tuple, tuple] = {}
+    if prefetch is not None:
+        for n in ir.nodes:
+            if not isinstance(n.op, planir.Fetch):
+                continue
+            fk = (n.op.kind, n.op.pid)
+            if fk in futs:
+                continue
+            if n.op.kind == "delta":
+                keys, na, ea = dg._delta_keys(n.op.pid, NO_ATTRS)
+                allk, meta = keys + na + ea, (len(keys), len(na))
+            else:
+                allk, meta = dg._elist_keys(n.op.pid, NO_ATTRS), None
+            keymeta[fk] = (allk, meta)
+            futs[fk] = prefetch.submit(allk)
+    payloads: dict[tuple, Any] = {}
+
+    def get_payload(kind: str, pid: int):
+        fk = (kind, pid)
+        if fk not in payloads:
+            fut = futs.pop(fk, None)
+            if fut is not None:
+                allk, meta = keymeta.pop(fk)
+                blobs = fut.result()
+                payloads[fk] = (dg._decode_delta(blobs, *meta)
+                                if kind == "delta"
+                                else dg._decode_elist(allk, blobs))
+            else:
+                payloads[fk] = (dg._fetch_delta(pid, NO_ATTRS)
+                                if kind == "delta"
+                                else dg._fetch_elist(pid, NO_ATTRS))
+        return payloads[fk]
+
+    return get_payload
+
+
+def _np_apply_pair(bn: np.ndarray, be: np.ndarray, pair, U_n: int, U_e: int):
+    na, nd, ea, ed = pair
+    bn = (bn & ~bmod.np_from_indices(nd, U_n)) | bmod.np_from_indices(na, U_n)
+    be = (be & ~bmod.np_from_indices(ed, U_e)) | bmod.np_from_indices(ea, U_e)
+    return bn, be
+
+
+def execute_ir_jax(dg: DeltaGraph, ir: Plan, *, impl: str = "xla",
+                   pool=None, prefetch=None
+                   ) -> dict[Any, tuple[np.ndarray, np.ndarray]]:
+    """Execute a plan IR (structure-only) on the JAX bitmap backend.
+
+    The DAG is decomposed into maximal linear **segments** between
+    boundaries (sources, Fork nodes, targets); every wave batches all
+    ready segments — sibling branches after a Fork in particular — into a
+    single vmapped ``delta_apply_chain`` call over stacked bit-planes, so
+    B branches cost one fused pass instead of B sequential chains.
+
+    Returns ``{target: (node_mask, edge_mask)}`` bool arrays.
+    """
+    U_n, U_e = dg.universe.num_nodes, dg.universe.num_edges
+    W_n, W_e = bmod.num_words(U_n), bmod.num_words(U_e)
+    byid = {n.nid: n for n in ir.nodes}
+    get_payload = _make_payload_resolver(dg, ir, prefetch)
+
+    # state topology: apply children per state node; forks pass through
+    children: dict[int, list[int]] = {}
+    fork_child: dict[int, int] = {}
+    for n in ir.nodes:
+        if isinstance(n.op, planir.APPLY_OPS):
+            for d in n.deps:
+                if not isinstance(byid[d].op, planir.Fetch):
+                    children.setdefault(d, []).append(n.nid)
+        elif isinstance(n.op, planir.Fork):
+            fork_child[n.deps[0]] = n.nid
+
+    target_nids = set(ir.targets.values())
+
+    def is_boundary(nid: int) -> bool:
+        return (nid in target_nids or nid in fork_child
+                or len(children.get(nid, ())) != 1)
+
+    # source values (host-side: tiny — one packed bitmap each)
+    vals: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    frontier: list[int] = []
+    for n in ir.nodes:
+        op = n.op
+        if isinstance(op, planir.Source):
+            if op.kind == "empty":
+                v = (np.zeros(W_n, np.uint32), np.zeros(W_e, np.uint32))
+            elif op.kind == "mat":
+                assert pool is not None, "materialized plan needs a GraphPool"
+                pn, pe = pool._resolve_masks(op.gid)
+                v = (_fit_words(pn, W_n), _fit_words(pe, W_e))
+            else:  # current = last leaf + recent events
+                st = dg._last_leaf_state.resized(dg.universe)
+                v = _np_apply_pair(bmod.np_pack(st.node_mask),
+                                   bmod.np_pack(st.edge_mask),
+                                   _recent_pair(dg, True, None), U_n, U_e)
+            vals[n.nid] = v
+            frontier.append(n.nid)
+
+    def expand(nid: int) -> None:
+        """Fork nodes inherit their parent's value and join the frontier."""
+        if nid in fork_child:
+            f = fork_child[nid]
+            vals[f] = vals[nid]
+            frontier.append(f)
+
+    for nid in list(vals):
+        expand(nid)
+
+    while frontier:
+        # collect every ready segment in this wave
+        segments: list[tuple[int, list[int]]] = []   # (parent, [apply nids])
+        wave, frontier = frontier, []
+        for pnid in wave:
+            for c in children.get(pnid, ()):
+                seg = [c]
+                while not is_boundary(seg[-1]):
+                    seg.append(children[seg[-1]][0])
+                segments.append((pnid, seg))
+        if not segments:
+            break
+        chains = [[_node_pair(dg, byid[s].op, get_payload) for s in seg]
+                  for _, seg in segments]
+        K = max(len(c) for c in chains)
+        B = len(segments)
+        bases_n = np.stack([vals[p][0] for p, _ in segments])
+        bases_e = np.stack([vals[p][1] for p, _ in segments])
+        adds_n = np.zeros((B, K, W_n), np.uint32)
+        dels_n = np.zeros((B, K, W_n), np.uint32)
+        adds_e = np.zeros((B, K, W_e), np.uint32)
+        dels_e = np.zeros((B, K, W_e), np.uint32)
+        for i, chain in enumerate(chains):
+            for j, (na, nd, ea, ed) in enumerate(chain):
+                adds_n[i, j] = bmod.np_from_indices(na, U_n)
+                dels_n[i, j] = bmod.np_from_indices(nd, U_n)
+                adds_e[i, j] = bmod.np_from_indices(ea, U_e)
+                dels_e[i, j] = bmod.np_from_indices(ed, U_e)
+        out_n = np.asarray(delta_apply_chain_batched(
+            jnp.asarray(bases_n), jnp.asarray(adds_n), jnp.asarray(dels_n),
+            impl=impl))
+        out_e = np.asarray(delta_apply_chain_batched(
+            jnp.asarray(bases_e), jnp.asarray(adds_e), jnp.asarray(dels_e),
+            impl=impl))
+        for i, (_, seg) in enumerate(segments):
+            end = seg[-1]
+            vals[end] = (out_n[i], out_e[i])
+            frontier.append(end)
+            expand(end)
+
+    out: dict[Any, tuple[np.ndarray, np.ndarray]] = {}
+    for tgt, nid in ir.targets.items():
+        nm = bmod.np_unpack(vals[nid][0], U_n)
+        em = bmod.np_unpack(vals[nid][1], U_e)
+        nm &= ~dg.universe.node_transient[:U_n]
+        em &= ~dg.universe.edge_transient[:U_e]
+        out[tgt] = (nm, em)
+    return out
+
+
+def execute_multipoint_jax(dg: DeltaGraph, times, *, impl: str = "xla",
+                           pool=None, use_current: bool = True,
+                           land_in_pool: bool = False, prefetch=None):
+    """Batched multipoint retrieval on the JAX backend: one Steiner plan,
+    sibling branches vmapped, store gets optionally prefetched.  Returns
+    ``{t: (node_mask, edge_mask)}``, or ``{t: pool gid}`` when
+    ``land_in_pool`` — the masks are then overlaid into GraphPool bit
+    pairs in a single batched insert."""
+    ir = dg.plan_multipoint([int(t) for t in times], NO_ATTRS, use_current)
+    masks = execute_ir_jax(dg, ir, impl=impl, pool=pool, prefetch=prefetch)
+    if not land_in_pool:
+        return masks
+    assert pool is not None, "land_in_pool needs a GraphPool"
+    order = list(masks)
+    gids = pool.insert_snapshots_packed(
+        [(bmod.np_pack(masks[t][0]), bmod.np_pack(masks[t][1]))
+         for t in order])
+    return dict(zip(order, gids))
 
 
 # ---------------------------------------------------------------------------

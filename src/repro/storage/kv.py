@@ -33,15 +33,78 @@ def _key_str(key: Key) -> str:
     return f"{p}/{d}/{c}"
 
 
+def mget_optional(store: "KVStore", keys: list) -> list:
+    """Batched get where a missing key yields ``None`` (a component created
+    before its column existed).  One protocol shared by the synchronous
+    executor path and the async prefetcher — they must decode identically."""
+    out = []
+    for k in keys:
+        try:
+            out.append(store.get(k))
+        except KeyError:
+            out.append(None)
+    return out
+
+
 class KVStats:
+    """Byte/op counters, lock-protected: the async prefetcher
+    (``runtime/executor.py``) drives gets from a thread pool, and unlocked
+    ``+=`` would drop increments under contention."""
+
     def __init__(self) -> None:
+        self._lock = threading.Lock()
         self.gets = 0
         self.puts = 0
         self.bytes_read = 0
         self.bytes_written = 0
 
+    def add_get(self, nbytes: int) -> None:
+        with self._lock:
+            self.gets += 1
+            self.bytes_read += nbytes
+
+    def add_put(self, nbytes: int) -> None:
+        with self._lock:
+            self.puts += 1
+            self.bytes_written += nbytes
+
     def reset(self) -> None:
-        self.__init__()
+        with self._lock:
+            self.gets = self.puts = 0
+            self.bytes_read = self.bytes_written = 0
+
+
+class AggregateKVStats:
+    """Read-only aggregating view over several backends' ``KVStats`` —
+    ``PartitionedKV.stats``.  Summing on read (instead of double-counting
+    at the router) means bytes fetched by code that talks to a backend
+    directly are still reported, and there is no per-call router overhead."""
+
+    def __init__(self, parts: list["KVStore"]) -> None:
+        self._parts = parts
+
+    def _sum(self, field: str) -> int:
+        return sum(getattr(p.stats, field) for p in self._parts)
+
+    @property
+    def gets(self) -> int:
+        return self._sum("gets")
+
+    @property
+    def puts(self) -> int:
+        return self._sum("puts")
+
+    @property
+    def bytes_read(self) -> int:
+        return self._sum("bytes_read")
+
+    @property
+    def bytes_written(self) -> int:
+        return self._sum("bytes_written")
+
+    def reset(self) -> None:
+        for p in self._parts:
+            p.stats.reset()
 
 
 class KVStore:
@@ -86,14 +149,12 @@ class MemKV(KVStore):
 
     def get(self, key: Key) -> bytes:
         v = self._d[key]
-        self.stats.gets += 1
-        self.stats.bytes_read += len(v)
+        self.stats.add_get(len(v))
         return v
 
     def put(self, key: Key, value: bytes) -> None:
         self._d[key] = bytes(value)
-        self.stats.puts += 1
-        self.stats.bytes_written += len(value)
+        self.stats.add_put(len(value))
 
     def delete(self, key: Key) -> None:
         self._d.pop(key, None)
@@ -181,8 +242,7 @@ class LogFileKV(KVStore):
             self._fh.write(_MAGIC + struct.pack("<I", len(ks)) + ks
                            + struct.pack("<Q", len(value)) + value)
             self._index[ks.decode()] = (pos + 8 + len(ks) + 8, len(value))
-        self.stats.puts += 1
-        self.stats.bytes_written += len(value)
+        self.stats.add_put(len(value))
 
     def get(self, key: Key) -> bytes:
         off, length = self._index[_key_str(key)]
@@ -191,8 +251,7 @@ class LogFileKV(KVStore):
             with open(self.log_path, "rb") as f:
                 f.seek(off)
                 v = f.read(length)
-        self.stats.gets += 1
-        self.stats.bytes_read += len(v)
+        self.stats.add_get(len(v))
         return v
 
     def delete(self, key: Key) -> None:
@@ -225,25 +284,29 @@ class LogFileKV(KVStore):
 
 class PartitionedKV(KVStore):
     """Routes by partition_id across per-unit backends (paper: one storage
-    instance per machine; all deltas have k partitions)."""
+    instance per machine; all deltas have k partitions).
+
+    ``stats`` aggregates the per-backend counters on read — the router
+    keeps no counters of its own, so traffic that reaches a backend
+    directly (a partition-local reader, a prefetch thread pinned to one
+    storage unit) is never under-reported."""
 
     def __init__(self, parts: list[KVStore]) -> None:
-        super().__init__()
         self.parts = parts
+        self._agg = AggregateKVStats(parts)
+
+    @property
+    def stats(self) -> AggregateKVStats:
+        return self._agg
 
     def _route(self, key: Key) -> KVStore:
         return self.parts[key[0] % len(self.parts)]
 
     def get(self, key: Key) -> bytes:
-        v = self._route(key).get(key)
-        self.stats.gets += 1
-        self.stats.bytes_read += len(v)
-        return v
+        return self._route(key).get(key)
 
     def put(self, key: Key, value: bytes) -> None:
         self._route(key).put(key, value)
-        self.stats.puts += 1
-        self.stats.bytes_written += len(value)
 
     def delete(self, key: Key) -> None:
         self._route(key).delete(key)

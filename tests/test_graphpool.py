@@ -108,3 +108,71 @@ def test_update_current_marks_recently_deleted(churn):
     from repro.core import bitmaps as bm
     marked = bm.np_unpack(gm.pool.edge_planes[1], uni.num_edges)
     assert np.all(marked[deleted])
+
+
+def test_cleaner_force_keeps_live_dependents(churn):
+    """Plane-row recycling under ``cleaner(force=True)`` with live
+    dependents: releasing a bit-pair parent un-depends its children, so a
+    forced clean must never reclaim membership a dependent still needs."""
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    root = gm.dg.root_nids()[0]
+    gid_parent = gm.dg.materialize(root, gm.pool)
+    t = int(ev.time[600])
+    h = gm.get_hist_graph(t)
+    truth = replay(uni, ev, t)
+    entry = gm.pool.table[h.gid]
+    parent_bits = gm.pool.table[gid_parent].bits
+
+    gm.pool.release(gid_parent)
+    # parent logically gone but rows not yet zeroed; dependent already safe
+    assert gm.pool.table[h.gid].dep_gid is None
+    gm.pool.cleaner(force=True)
+    # parent's rows really were zeroed and recycled ...
+    for b in parent_bits:
+        assert not gm.pool.node_planes[b].any()
+        assert b in gm.pool._free_bits
+    # ... and the dependent's membership is intact
+    assert np.array_equal(h.node_mask, truth.node_mask)
+    assert np.array_equal(h.edge_mask, truth.edge_mask)
+
+
+def test_cleaner_force_recycled_rows_safe_for_reuse(churn):
+    """Rows recycled by a forced clean can be re-allocated to new
+    snapshots without corrupting survivors (stale bits must be zeroed)."""
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=80, k=2)
+    t_keep, t_drop = int(ev.time[400]), int(ev.time[900])
+    h_keep, h_drop = gm.get_hist_graphs([t_keep, t_drop])
+    dropped_bits = gm.pool.table[h_drop.gid].bits
+    h_drop.close()                      # release + opportunistic clean
+    gm.pool.cleaner(force=True)
+    assert all(b in gm.pool._free_bits for b in dropped_bits)
+    # re-insert; allocation draws from the recycled free list
+    free_before = len(gm.pool._free_bits)
+    h_new = gm.get_hist_graph(int(ev.time[100]))
+    assert len(gm.pool._free_bits) == free_before - 2  # reused, not regrown
+    for h, t in ((h_keep, t_keep), (h_new, int(ev.time[100]))):
+        truth = replay(uni, ev, t)
+        assert np.array_equal(h.node_mask, truth.node_mask), t
+        assert np.array_equal(h.edge_mask, truth.edge_mask), t
+
+
+def test_batched_insert_matches_sequential(churn):
+    """insert_snapshots (one bit-pair allocation pass) must produce the
+    same memberships as one-at-a-time inserts."""
+    uni, ev = churn
+    gm1 = GraphManager(uni, ev, L=80, k=2)
+    gm2 = GraphManager(uni, ev, L=80, k=2)
+    times = [int(ev.time[i]) for i in (100, 500, 900, 1150)]
+    states = [gm1.dg.get_snapshot(t, pool=gm1.pool) for t in times]
+    gids_b = gm1.pool.insert_snapshots(states)
+    gids_s = [gm2.pool.insert_snapshot(
+        gm2.dg.get_snapshot(t, pool=gm2.pool)) for t in times]
+    for gb, gs, t in zip(gids_b, gids_s, times):
+        truth = replay(uni, ev, t)
+        assert np.array_equal(gm1.pool.get_node_mask(gb), truth.node_mask)
+        assert np.array_equal(gm1.pool.get_node_mask(gb),
+                              gm2.pool.get_node_mask(gs))
+        assert np.array_equal(gm1.pool.get_edge_mask(gb),
+                              gm2.pool.get_edge_mask(gs))

@@ -1,0 +1,263 @@
+"""Unified retrieval-plan IR + batched execution engine.
+
+Covers: IR structure (typed steps, legacy surface, fork insertion, fetch
+dedup), shared-prefix merging, the host executor with and without async
+KV prefetch, the vmapped JAX DAG backend vs the oracle, the batch
+scheduler, the manager-level ``get_snapshots`` batch API, the
+advisor-evict → snapshot-cache invalidation, and the aggregated
+PartitionedKV stats.
+"""
+import numpy as np
+import pytest
+
+from conftest import assert_state_equal
+from repro.core import GraphManager, replay
+from repro.core.planir import (ApplyDelta, ApplyElist, Fetch, Fork,
+                               Materialize, Source, merge_irs)
+from repro.core.query import NO_ATTRS, parse_attr_options
+from repro.data.generators import churn_network
+from repro.runtime.executor import (BatchScheduler, Prefetcher,
+                                    RetrievalRequest)
+
+RNG = np.random.default_rng(13)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    uni, ev = churn_network(n_initial_edges=150, n_events=1200, seed=11)
+    gm = GraphManager(uni, ev, L=80, k=2)
+    return uni, ev, gm
+
+
+# ---------------------------------------------------------------------------
+# IR structure
+# ---------------------------------------------------------------------------
+
+
+def test_singlepoint_ir_shape(setup):
+    uni, ev, gm = setup
+    t = int(ev.time[600])
+    ir = gm.dg.plan_singlepoint(t, NO_ATTRS)
+    ops = [type(n.op) for n in ir.nodes]
+    assert ops.count(Source) == 1
+    assert ops.count(Materialize) == 1
+    # legacy surface: linear steps, source first, actions as tuples
+    steps = ir.steps
+    assert steps[0].parent is None
+    assert steps[0].action[0] in ("empty", "mat", "current")
+    for a, b in zip(steps, steps[1:]):
+        assert b.parent == a.key
+    # total weight is the Dijkstra distance (sum of step weights)
+    assert ir.total_weight == pytest.approx(sum(s.weight for s in steps))
+
+
+def test_fetch_nodes_deduped_per_payload(setup):
+    """Chained multipoint targets share a leaf-eventlist: the IR must carry
+    ONE Fetch node per payload however many partial applies consume it."""
+    uni, ev, gm = setup
+    t0 = int(ev.time[500])
+    ir = gm.dg.plan_multipoint([t0, t0 + 1, t0 + 2], NO_ATTRS)
+    fetches = [n.op for n in ir.nodes if isinstance(n.op, Fetch)]
+    assert len(fetches) == len(set(fetches))
+    assert ir.payload_fetches == len(fetches)
+    # and at least one eventlist payload is consumed by >= 2 applies
+    elist_uses = {}
+    for n in ir.nodes:
+        if isinstance(n.op, ApplyElist):
+            elist_uses[n.op.pid] = elist_uses.get(n.op.pid, 0) + 1
+    assert max(elist_uses.values()) >= 2
+
+
+def test_multipoint_ir_has_forks(setup):
+    uni, ev, gm = setup
+    times = [int(t) for t in np.linspace(ev.time[10], ev.time[-10], 8)]
+    ir = gm.dg.plan_multipoint(times, NO_ATTRS)
+    forks = [n for n in ir.nodes if isinstance(n.op, Fork)]
+    assert forks, "8 spread-out targets must share a trunk and fork"
+    byid = {n.nid: n for n in ir.nodes}
+    for f in forks:
+        assert f.op.fanout >= 2
+        # fork consumers reference the fork, which passes its parent's key
+        parent = byid[f.deps[0]]
+        assert f.key == parent.key
+
+
+def test_merge_irs_shared_prefix(setup):
+    """Merging per-query singlepoint plans dedups the shared skeleton
+    prefix: merged weight < sum of individual weights, and every shared
+    payload is fetched once."""
+    uni, ev, gm = setup
+    times = [int(t) for t in np.linspace(ev.time[10], ev.time[-10], 16)]
+    irs = [gm.dg.plan_singlepoint(t, NO_ATTRS) for t in times]
+    merged = merge_irs(irs)
+    indiv = sum(ir.total_weight for ir in irs)
+    assert merged.total_weight < indiv
+    assert set(merged.targets) == set(times)
+    fetch_keys = [(n.op.kind, n.op.pid) for n in merged.nodes
+                  if isinstance(n.op, Fetch)]
+    assert len(fetch_keys) == len(set(fetch_keys))
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+
+def test_host_executor_with_prefetch_matches_oracle(setup):
+    uni, ev, gm = setup
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    times = [int(t) for t in RNG.integers(0, int(ev.time[-1]) + 2, 10)]
+    with Prefetcher(gm.store, workers=4) as pf:
+        got = gm.dg.get_snapshots(times, opts, pool=gm.pool, prefetch=pf)
+    for t in set(times):
+        assert_state_equal(got[t], replay(uni, ev, t), msg=f"t={t}")
+
+
+def test_jax_dag_executor_matches_oracle(setup):
+    from repro.runtime.jax_exec import execute_multipoint_jax
+    uni, ev, gm = setup
+    times = [int(t) for t in RNG.integers(0, int(ev.time[-1]) + 2, 12)]
+    masks = execute_multipoint_jax(gm.dg, times, pool=gm.pool)
+    for t in set(times):
+        truth = replay(uni, ev, t)
+        nm, em = masks[t]
+        assert np.array_equal(nm, truth.node_mask), t
+        assert np.array_equal(em, truth.edge_mask), t
+
+
+def test_jax_executor_lands_in_pool(setup):
+    from repro.runtime.jax_exec import execute_multipoint_jax
+    uni, ev, gm = setup
+    times = [int(ev.time[i]) for i in (100, 500, 900)]
+    gids = execute_multipoint_jax(gm.dg, times, pool=gm.pool,
+                                  land_in_pool=True)
+    for t, gid in gids.items():
+        truth = replay(uni, ev, t)
+        assert np.array_equal(gm.pool.get_node_mask(gid), truth.node_mask)
+        assert np.array_equal(gm.pool.get_edge_mask(gid), truth.edge_mask)
+        gm.pool.release(gid)
+    gm.pool.cleaner(force=True)
+
+
+def test_batch_scheduler_dedups_and_matches(setup):
+    uni, ev, gm = setup
+    times = [int(t) for t in np.linspace(ev.time[20], ev.time[-20], 16)]
+    sched = BatchScheduler(gm.dg, pool=gm.pool)
+    results = sched.run([RetrievalRequest([t]) for t in times])
+    assert sched.last_merged.total_weight < sched.last_individual_weight
+    for res, t in zip(results, times):
+        truth = replay(uni, ev, t)
+        assert np.array_equal(res[t].node_mask, truth.node_mask)
+
+
+def test_manager_get_snapshots_batch_and_cache(setup):
+    uni, ev, gm = setup
+    gm.cache.clear()
+    times = [int(ev.time[i]) for i in (50, 450, 850, 1150)]
+    out = gm.get_snapshots(times, "+node:all")
+    hits_before = gm.workload.cache_hits
+    out2 = gm.get_snapshots(times, "+node:all")   # exact repeat → all hits
+    assert gm.workload.cache_hits >= hits_before + len(times)
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(out[t].node_mask, truth.node_mask)
+        assert out[t].equal(out2[t])
+
+
+# ---------------------------------------------------------------------------
+# satellite: advisor eviction invalidates routed-through cache entries
+# ---------------------------------------------------------------------------
+
+
+def test_advisor_evict_drops_dependent_cache_entries():
+    uni, ev = churn_network(n_initial_edges=120, n_events=1000, seed=23)
+    gm = GraphManager(uni, ev, L=64, k=2)
+    gm.enable_advisor(budget_bytes=8 << 20, replan_every=10_000)
+    pinned = set(gm.advisor.pinned)
+    assert pinned, "advisor should pin something under an 8 MiB budget"
+    # issue queries; some plans route through the pins
+    tmax = int(ev.time[-1])
+    for t in range(0, tmax, max(tmax // 20, 1)):
+        gm.get_snapshot(int(t))
+    # a query at the newest time plans from the current graph — no pin deps
+    gm.get_snapshot(tmax)
+    dep_keys = [k for k, d in gm.cache._deps.items() if d & pinned]
+    safe_keys = [k for k in gm.cache._d if k not in gm.cache._deps]
+    assert dep_keys, "some cached entries must have routed through a pin"
+    assert safe_keys, "the current-sourced entry must carry no pin deps"
+    gm.disable_advisor()
+    for k in dep_keys:
+        assert k not in gm.cache._d, "stale entry survived pin eviction"
+    for k in safe_keys:
+        assert k in gm.cache._d, "untouched entry must survive"
+
+
+def test_workload_records_node_hits():
+    uni, ev = churn_network(n_initial_edges=100, n_events=600, seed=29)
+    gm = GraphManager(uni, ev, L=64, k=2, cache_bytes=0)
+    gm.get_snapshot(int(ev.time[300]))
+    hits = gm.workload.node_hits
+    assert hits and all(n in gm.dg.nodes for n in hits)
+
+
+# ---------------------------------------------------------------------------
+# satellite: PartitionedKV aggregated stats
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_kv_stats_aggregate():
+    from repro.storage.kv import MemKV, PartitionedKV
+    parts = [MemKV() for _ in range(4)]
+    kv = PartitionedKV(parts)
+    for p in range(4):
+        kv.put((p, 0, "struct"), b"x" * (10 * (p + 1)))
+    assert kv.stats.puts == 4
+    assert kv.stats.bytes_written == 10 + 20 + 30 + 40
+    for p in range(4):
+        kv.get((p, 0, "struct"))
+    # a direct backend read must still be visible in the aggregate
+    parts[0].get((0, 0, "struct"))
+    assert kv.stats.gets == 5
+    assert kv.stats.bytes_read == 100 + 10
+    kv.stats.reset()
+    assert kv.stats.gets == 0 and kv.stats.bytes_written == 0
+
+
+def test_kv_stats_thread_safe_under_prefetch():
+    from concurrent.futures import ThreadPoolExecutor
+    from repro.storage.kv import MemKV
+    kv = MemKV()
+    kv.put((0, 0, "c"), b"abc")
+    N = 2000
+    with ThreadPoolExecutor(8) as ex:
+        list(ex.map(lambda _: kv.get((0, 0, "c")), range(N)))
+    assert kv.stats.gets == N + 0
+    assert kv.stats.bytes_read == 3 * N
+
+
+def test_jax_executor_after_universe_growth():
+    """Live updates that add new slots (§6) grow the universe past older
+    states; source bitmaps must be re-fit to the live word count."""
+    from repro.core.events import GraphHistoryBuilder
+    from repro.runtime.jax_exec import execute_multipoint_jax
+    b = GraphHistoryBuilder()
+    for i in range(8):
+        b.add_node(i, t=i)
+    for i in range(7):
+        b.add_edge(i, i + 1, t=10 + i, edge_id=("e", i))
+    uni, ev = b.finalize()
+    gm = GraphManager(uni, ev, L=4, k=2)
+    upd = GraphHistoryBuilder()
+    upd.universe = uni
+    upd._seq = 10_000
+    for i in range(40):                  # grow well past a 32-bit word
+        upd.add_node(("new", i), 100 + i)
+    _, ev2 = upd.finalize()
+    gm.update(ev2)
+    from repro.core.events import EventList
+    all_ev = EventList.concat([ev, ev2])
+    masks = execute_multipoint_jax(gm.dg, [12, 105, 139], pool=gm.pool)
+    for t, (nm, em) in masks.items():
+        truth = replay(uni, all_ev, t)
+        assert np.array_equal(nm, truth.node_mask), t
+        assert np.array_equal(em, truth.edge_mask), t
