@@ -17,11 +17,13 @@ def main() -> None:
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
 
-    from . import materialize_bench, paper_figs, retrieval_bench, roofline_report
+    from . import (materialize_bench, paper_figs, retrieval_bench,
+                   roofline_report, temporal_bench)
 
     benches = [
         materialize_bench.bench_materialize,
         retrieval_bench.bench_retrieval,
+        temporal_bench.bench_temporal,
         paper_figs.fig6_vs_copylog,
         paper_figs.fig7_vs_interval_tree,
         paper_figs.fig8a_graphpool_memory,

@@ -8,6 +8,8 @@ Public surface:
 * :class:`~repro.core.manager.GraphManager` — the paper's API façade
 * :class:`~repro.core.materialize.MaterializationAdvisor` — workload-aware
   memory materialization + the snapshot LRU cache
+* :class:`~repro.core.temporal.TemporalEngine` — incremental evolutionary
+  queries over snapshot intervals (``GraphManager.evolve``)
 """
 from .deltagraph import DeltaGraph  # noqa: F401
 from .events import (EventList, GraphHistoryBuilder, GraphUniverse,  # noqa: F401
@@ -17,3 +19,5 @@ from .manager import GraphManager, HistGraph  # noqa: F401
 from .materialize import (Advice, AdvisorConfig, MaterializationAdvisor,  # noqa: F401
                           SnapshotCache, WorkloadStats)
 from .query import AttrOptions, TimeExpression, parse_attr_options  # noqa: F401
+from .temporal import (EvolveOp, EvolveResult, PregelFold,  # noqa: F401
+                       StepDelta, TemporalEngine)

@@ -420,6 +420,31 @@ class DeltaGraph:
         i = int(np.searchsorted(np.asarray(self.leaf_time[1:]), t, side="right"))
         return min(i, len(self.leaf_nids) - 1)
 
+    def _first_leaf_covering(self, ts: int) -> int:
+        """First eventlist index whose rows can include ``time >= ts`` —
+        the *inclusive-start* counterpart of :meth:`_leaf_for_time` (which
+        is exclusive at its bound).  Expressed directly with a
+        ``side="left"`` search instead of ``_leaf_for_time(ts - 1)``
+        arithmetic; for integer timestamps the two coincide
+        (#{j : leaf_time[j] < ts} either way) — pinned by
+        ``tests/test_boundary_slices.py``."""
+        i = int(np.searchsorted(np.asarray(self.leaf_time[1:]), ts, side="left"))
+        return min(i, len(self.leaf_nids) - 1)
+
+    def elists_covering(self, lo: int, hi: int) -> list[int]:
+        """Leaf-eventlist indices holding rows with ``lo < time <= hi``
+        (the interval-slice convention used everywhere in planning).
+        Chunk ``i``'s rows satisfy ``leaf_time[i] <= time <= leaf_time[i+1]``
+        — times are chronologically sorted and boundary timestamps may
+        repeat across the cut — so the covering range is
+        ``[_leaf_for_time(lo), _leaf_for_time(hi)]`` clipped to real
+        eventlists; rows past the last leaf live in ``self.recent``."""
+        if hi <= lo or len(self.leaf_nids) < 2:
+            return []
+        i0 = self._leaf_for_time(lo)
+        i1 = min(self._leaf_for_time(hi), len(self.leaf_nids) - 2)
+        return list(range(i0, i1 + 1))
+
     def _virtual_edges(self, t: int, options: AttrOptions):
         """Edges connecting the virtual node S_t to the skeleton (§4.3).
 
@@ -833,7 +858,7 @@ class DeltaGraph:
         """GetHistGraphInterval: elements *added* during [ts, te), plus the
         transient events in that window (§3.2.1)."""
         node_add, edge_add, tr_slot, tr_time = [], [], [], []
-        li = self._leaf_for_time(ts - 1)
+        li = self._first_leaf_covering(ts)
         for i in range(li, len(self.leaf_nids) - 1):
             if self.leaf_time[i] >= te:
                 break

@@ -10,6 +10,7 @@ and the programmatic HistGraph API (§3.2.1).
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Sequence
 
 import numpy as np
@@ -140,6 +141,12 @@ class GraphManager:
             self.prefetcher = Prefetcher(self.store, workers=prefetch_workers)
         else:
             self.prefetcher = None
+        self._temporal = None
+        # concurrent retrievals are supported (cache and workload counters
+        # are internally locked); advisor *replans* mutate the pool and the
+        # skeleton's materialization marks, so they are serialized here —
+        # see ARCHITECTURE.md "Concurrency" for what is and isn't safe
+        self._advisor_lock = threading.Lock()
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
@@ -177,7 +184,9 @@ class GraphManager:
         if self.cache is not None:
             self.cache.put(key, st, deps=plan.source_nids())
         if self.advisor is not None:
-            self.advisor.on_query()
+            with self._advisor_lock:
+                if self.advisor is not None:
+                    self.advisor.on_query()
         return st
 
     def get_snapshots(self, times: Sequence[int],
@@ -212,7 +221,9 @@ class GraphManager:
                     self.cache.put(SnapshotCache.key(t, opts, use_current),
                                    states[t], deps=deps.get(t))
             if self.advisor is not None:
-                self.advisor.on_query(n=len(misses))
+                with self._advisor_lock:
+                    if self.advisor is not None:
+                        self.advisor.on_query(n=len(misses))
         return out
 
     def get_hist_graph(self, t: int, attr_options: str = "",
@@ -253,6 +264,33 @@ class GraphManager:
     def get_hist_graph_interval(self, ts: int, te: int) -> dict[str, np.ndarray]:
         return self.dg.get_interval(ts, te)
 
+    # ------------------------------------------------------ temporal analytics
+    def evolve(self, times: "Sequence[int] | TimeExpression",
+               op: Any = "masks", *, attr_options: str | AttrOptions = "",
+               use_current: bool = True, incremental: bool = True,
+               **op_kwargs):
+        """Evolutionary query over an interval of timepoints
+        (:mod:`repro.core.temporal`): retrieve the *first* snapshot through
+        the plan IR, then advance incrementally by the inter-snapshot
+        event slices — incremental degree/density, warm-started PageRank,
+        re-union-only connected components, or a generic Pregel fold.
+
+        ``times`` is a sequence of timepoints or a
+        :class:`~repro.core.query.TimeExpression` (its timepoints are
+        used); ``op`` is an operator name (``"masks"``, ``"degree"``,
+        ``"density"``, ``"pagerank"``, ``"components"``), an
+        :class:`~repro.core.temporal.EvolveOp` instance (e.g.
+        :class:`~repro.core.temporal.PregelFold`), or a plain fold
+        callable ``f(prev_value, state, delta, t)``.
+        ``incremental=False`` runs the per-snapshot recompute baseline.
+        Returns an :class:`~repro.core.temporal.EvolveResult`."""
+        if self._temporal is None:
+            from .temporal import TemporalEngine
+            self._temporal = TemporalEngine(self)
+        return self._temporal.evolve(times, op, attr_options=attr_options,
+                                     use_current=use_current,
+                                     incremental=incremental, **op_kwargs)
+
     # ------------------------------------------------------------- updates
     def update(self, ev: EventList) -> None:
         """Live update path (§6): current graph + index maintenance."""
@@ -277,16 +315,17 @@ class GraphManager:
         ``budget_bytes``.  ``warm_start`` runs one plan immediately (with
         the uniform / analytical prior if no queries were recorded yet).
         Re-enabling evicts the previous advisor's pins first."""
-        self.disable_advisor()
-        cfg = AdvisorConfig(budget_bytes=budget_bytes,
-                            replan_every=replan_every,
-                            drift_threshold=drift_threshold,
-                            max_candidates=max_candidates)
-        self.advisor = MaterializationAdvisor(self.dg, self.pool,
-                                              self.workload, cfg,
-                                              rates=self.rates)
-        self.advisor.on_evict = self._on_advisor_evict
-        return self.advisor.replan() if warm_start else None
+        with self._advisor_lock:
+            self._disable_advisor_locked()
+            cfg = AdvisorConfig(budget_bytes=budget_bytes,
+                                replan_every=replan_every,
+                                drift_threshold=drift_threshold,
+                                max_candidates=max_candidates)
+            self.advisor = MaterializationAdvisor(self.dg, self.pool,
+                                                  self.workload, cfg,
+                                                  rates=self.rates)
+            self.advisor.on_evict = self._on_advisor_evict
+            return self.advisor.replan() if warm_start else None
 
     def _on_advisor_evict(self, nids: list[int]) -> None:
         """A replan evicted pins: cache entries whose plans routed through
@@ -296,6 +335,10 @@ class GraphManager:
 
     def disable_advisor(self) -> None:
         """Evict every advisor pin and stop re-planning."""
+        with self._advisor_lock:
+            self._disable_advisor_locked()
+
+    def _disable_advisor_locked(self) -> None:
         if self.advisor is None:
             return
         evicted = list(self.advisor.pinned)

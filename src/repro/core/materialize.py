@@ -38,6 +38,7 @@ fixed-depth by-hand version.  This module makes the policy *adaptive*:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Any, Iterable
@@ -79,10 +80,22 @@ class WorkloadStats:
         self.cache_hits = 0
         self.total_plan_bytes = 0.0
         self.total_wall_s = 0.0
+        # interval-analytics traffic (core/temporal.py): endpoint leaves
+        # and per-(lo, hi) counts, so the advisor learns where evolutionary
+        # queries anchor their (single) planned retrieval
+        self.interval_count = 0
+        self.interval_points = 0
+        self.interval_wall_s = 0.0
+        self.interval_hist: dict[tuple[int, int], int] = {}
+        # recording is read-modify-write on plain dicts; concurrent
+        # retrievals (executor threads, 16-way serving) must not lose or
+        # corrupt increments
+        self._lock = threading.Lock()
 
     @property
     def leaf_weight(self) -> dict[int, float]:
-        return {k: v / self._boost for k, v in self._raw.items()}
+        with self._lock:
+            return {k: v / self._boost for k, v in self._raw.items()}
 
     @property
     def node_hits(self) -> dict[int, float]:
@@ -90,12 +103,12 @@ class WorkloadStats:
         appeared in an executed plan DAG.  The advisor ranks its candidate
         pool by these — a node the planner actually routes through is a
         better pin than one merely high in the hierarchy."""
-        return {k: v / self._boost for k, v in self._raw_nodes.items()}
+        with self._lock:
+            return {k: v / self._boost for k, v in self._raw_nodes.items()}
 
     # -- recording -----------------------------------------------------------
-    def record(self, leaf_index: int, plan_bytes: float,
-               options: AttrOptions = NO_ATTRS,
-               wall_s: float = 0.0) -> None:
+    def _tick(self) -> None:
+        """Advance the decay boost (callers hold ``_lock``)."""
         self._boost /= self.decay
         if self._boost > 1e12:  # renormalize before float64 overflow
             for k in self._raw:
@@ -103,21 +116,52 @@ class WorkloadStats:
             for k in self._raw_nodes:
                 self._raw_nodes[k] /= self._boost
             self._boost = 1.0
-        self._raw[leaf_index] = self._raw.get(leaf_index, 0.0) + self._boost
-        key = (options.node_cols, options.edge_cols)
-        self.opt_count[key] = self.opt_count.get(key, 0) + 1
-        self.num_queries += 1
-        self.total_plan_bytes += float(plan_bytes)
-        self.total_wall_s += float(wall_s)
+
+    def record(self, leaf_index: int, plan_bytes: float,
+               options: AttrOptions = NO_ATTRS,
+               wall_s: float = 0.0) -> None:
+        with self._lock:
+            self._tick()
+            self._raw[leaf_index] = self._raw.get(leaf_index, 0.0) + self._boost
+            key = (options.node_cols, options.edge_cols)
+            self.opt_count[key] = self.opt_count.get(key, 0) + 1
+            self.num_queries += 1
+            self.total_plan_bytes += float(plan_bytes)
+            self.total_wall_s += float(wall_s)
 
     def record_cache_hit(self) -> None:
-        self.cache_hits += 1
+        with self._lock:
+            self.cache_hits += 1
 
     def record_nodes(self, nids: Iterable[int]) -> None:
         """Record the skeleton nodes one executed plan DAG routed through
         (called by :meth:`DeltaGraph.execute`, once per plan)."""
-        for nid in nids:
-            self._raw_nodes[nid] = self._raw_nodes.get(nid, 0.0) + self._boost
+        with self._lock:
+            for nid in nids:
+                self._raw_nodes[nid] = (self._raw_nodes.get(nid, 0.0)
+                                        + self._boost)
+
+    def record_interval(self, leaf_lo: int, leaf_hi: int, n_points: int,
+                        wall_s: float = 0.0) -> None:
+        """Record one evolutionary query over ``n_points`` timepoints whose
+        planned retrieval landed at leaf ``leaf_lo`` (that retrieval is
+        recorded by :meth:`DeltaGraph.execute` as usual — not double
+        counted here; ``wall_s`` covers the whole evolve and goes to the
+        separate ``interval_wall_s`` aggregate for the same reason).  The
+        *end* leaf additionally gains histogram weight: interval
+        workloads walk forward through history, so the next evolve call
+        tends to anchor near where the last one ended — pinning there
+        shortens the upcoming plans."""
+        with self._lock:
+            self.interval_count += 1
+            self.interval_points += int(n_points)
+            key = (int(leaf_lo), int(leaf_hi))
+            self.interval_hist[key] = self.interval_hist.get(key, 0) + 1
+            self.interval_wall_s += float(wall_s)
+            if leaf_hi != leaf_lo:
+                self._tick()
+                self._raw[leaf_hi] = (self._raw.get(leaf_hi, 0.0)
+                                      + self._boost)
 
     # -- reads ---------------------------------------------------------------
     def weights(self, num_leaves: int) -> np.ndarray:
@@ -178,19 +222,23 @@ class SnapshotCache:
         self._bytes = 0
         self.hits = 0
         self.misses = 0
+        # concurrent serving threads hit one shared cache; eviction is a
+        # multi-step pop/accounting sequence, so every entry point locks
+        self._lock = threading.RLock()
 
     @staticmethod
     def key(t: int, options: AttrOptions, use_current: bool) -> tuple:
         return (int(t), options.node_cols, options.edge_cols, bool(use_current))
 
     def get(self, key: tuple) -> "MaterializedState | None":
-        st = self._d.get(key)
-        if st is None:
-            self.misses += 1
-            return None
-        self._d.move_to_end(key)
-        self.hits += 1
-        return st.copy()
+        with self._lock:
+            st = self._d.get(key)
+            if st is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return st.copy()
 
     def put(self, key: tuple, st: "MaterializedState",
             deps: "frozenset | set | None" = None) -> None:
@@ -200,15 +248,16 @@ class SnapshotCache:
         nb = _state_nbytes(st)
         if nb > self.max_bytes:
             return
-        if key in self._d:
-            self._evict_key(key)
-        self._d[key] = st.copy()
-        if deps:
-            self._deps[key] = frozenset(deps)
-        self._bytes += nb
-        while self._d and (self._bytes > self.max_bytes
-                           or len(self._d) > self.max_entries):
-            self._evict_key(next(iter(self._d)))
+        with self._lock:
+            if key in self._d:
+                self._evict_key(key)
+            self._d[key] = st.copy()
+            if deps:
+                self._deps[key] = frozenset(deps)
+            self._bytes += nb
+            while self._d and (self._bytes > self.max_bytes
+                               or len(self._d) > self.max_entries):
+                self._evict_key(next(iter(self._d)))
 
     def _evict_key(self, key: tuple) -> None:
         st = self._d.pop(key)
@@ -220,30 +269,39 @@ class SnapshotCache:
         nodes (called when the advisor evicts pins: the recorded
         ``materialized_as`` sources no longer exist)."""
         nids = set(nids)
-        dead = [k for k, deps in self._deps.items() if deps & nids]
-        for k in dead:
-            self._evict_key(k)
-        return len(dead)
+        with self._lock:
+            dead = [k for k, deps in self._deps.items() if deps & nids]
+            for k in dead:
+                self._evict_key(k)
+            return len(dead)
 
     def invalidate_from(self, t: int) -> int:
         """Drop entries at or after time ``t`` — plus every entry whose plan
         could have crossed the current graph (``use_current=True``), since
         live updates move CURRENT itself."""
-        dead = [k for k in self._d if k[0] >= t or k[3]]
-        for k in dead:
-            self._evict_key(k)
-        return len(dead)
+        with self._lock:
+            dead = [k for k in self._d if k[0] >= t or k[3]]
+            for k in dead:
+                self._evict_key(k)
+            return len(dead)
 
     def clear(self) -> None:
-        self._d.clear()
-        self._deps.clear()
-        self._bytes = 0
+        with self._lock:
+            self._d.clear()
+            self._deps.clear()
+            self._bytes = 0
 
     def nbytes(self) -> int:
         return self._bytes
 
     def __len__(self) -> int:
         return len(self._d)
+
+    def dep_keys(self) -> dict[tuple, frozenset]:
+        """Snapshot of the entry → dependency-nid map (stress tests assert
+        no surviving entry references an evicted pin)."""
+        with self._lock:
+            return dict(self._deps)
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,25 @@ class TimeExpression:
     times: Sequence[int]
     expr: tuple
 
+    def to_infix(self) -> str:
+        """Render back to the infix syntax :meth:`parse` accepts, with
+        minimal parentheses (``~`` binds tightest, then ``&``, then ``|``;
+        both binary operators are left-associative).  Round-trip law —
+        pinned by the property tests in ``tests/test_query_parse.py``::
+
+            TimeExpression.parse(tex.to_infix(), tex.times).expr == tex.expr
+        """
+        def go(e: tuple, prec: int) -> str:
+            op = e[0]
+            if op == "t":
+                return f"t{e[1]}"
+            if op == "not":
+                return "~" + go(e[1], 3)
+            sym, p = ("&", 2) if op == "and" else ("|", 1)
+            s = go(e[1], p) + sym + go(e[2], p + 1)
+            return f"({s})" if p < prec else s
+        return go(self.expr, 0)
+
     def evaluate(self, masks: Sequence[np.ndarray]) -> np.ndarray:
         def ev(e) -> np.ndarray:
             op = e[0]
@@ -132,6 +151,9 @@ class TimeExpression:
 
         def eat(tok=None):
             nonlocal pos
+            if pos >= len(tokens):  # truncated input, e.g. "(t0"
+                raise ValueError(f"unexpected end of TimeExpression {text!r}"
+                                 + (f" (expected {tok})" if tok else ""))
             t = tokens[pos]
             if tok and t != tok:
                 raise ValueError(f"expected {tok} got {t}")

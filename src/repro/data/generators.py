@@ -112,6 +112,21 @@ def churn_network(n_initial_edges: int = 500, n_events: int = 4000,
     return b.finalize()
 
 
+def dense_intervals(tmax: int, n: int, points: int,
+                    window_frac: float = 0.05,
+                    seed: int = 0) -> list[list[int]]:
+    """``n`` evolutionary-query windows of ``points`` evenly spaced
+    timepoints, each spanning ``window_frac`` of the history — the dense
+    "daily snapshots over a period" dashboard workload that
+    ``GraphManager.evolve`` / ``benchmarks/temporal_bench.py`` /
+    ``serve --mode evolve`` drive."""
+    rng = np.random.default_rng(seed)
+    span = max(int(tmax * window_frac), points)
+    starts = rng.integers(0, max(tmax - span, 1), n)
+    return [[int(t) for t in np.linspace(s, s + span, points)]
+            for s in starts]
+
+
 def random_history(n_events: int, seed: int,
                    n_attrs: int = 2, p_node: float = 0.3,
                    p_delete: float = 0.3, p_attr: float = 0.2,

@@ -6,6 +6,8 @@ On this CPU container kernels run with ``interpret=True``; ``impl='xla'``
 variants are what the dry-run lowers (keeps FLOPs visible to
 cost_analysis for the roofline).
 """
-from .delta_apply import delta_apply_chain, delta_apply_chain_batched  # noqa: F401
+from .delta_apply import (delta_apply_chain, delta_apply_chain_batched,  # noqa: F401
+                          delta_apply_chain_prefix,
+                          delta_apply_chain_prefix_batched)
 from .flash_attention import attention  # noqa: F401
 from .segment_sum import bucket_edges, segment_sum  # noqa: F401

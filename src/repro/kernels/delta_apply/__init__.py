@@ -1,2 +1,3 @@
 from .ops import (delta_apply_chain, delta_apply_chain_batched,  # noqa: F401
+                  delta_apply_chain_prefix, delta_apply_chain_prefix_batched,
                   delta_apply_chain_ref)

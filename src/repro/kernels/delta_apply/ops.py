@@ -11,14 +11,47 @@ import jax
 import jax.numpy as jnp
 
 from .delta_apply import delta_apply_chain_pallas
-from .ref import delta_apply_chain_ref
+from .ref import delta_apply_chain_prefix_ref, delta_apply_chain_ref
+
+# Shape bucketing for the jit'd XLA paths: chain calls arrive with
+# arbitrary (B, K, W) — every distinct shape would otherwise compile its
+# own executable, and a retrieval service sees a new shape per plan.
+# Padding B and K up to powers of two (all-zero (add, del) rows are
+# identity steps; extra batch rows are dropped) and W up to a 128-word
+# lane multiple collapses the shape space to a handful of buckets that
+# stay hot in the compile cache.
+_W_ALIGN = 128
+
+
+def _bucket(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    pad = target - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+_chain_jit = jax.jit(delta_apply_chain_ref)
+_chain_batched_jit = jax.jit(jax.vmap(delta_apply_chain_ref))
+_chain_prefix_batched_jit = jax.jit(jax.vmap(delta_apply_chain_prefix_ref))
 
 
 def delta_apply_chain(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray,
                       *, impl: str = "xla", block_w: int = 1024,
                       interpret: bool = True) -> jnp.ndarray:
     if impl == "xla":
-        return delta_apply_chain_ref(base, adds, dels)
+        W = base.shape[0]
+        Wp = -(-W // _W_ALIGN) * _W_ALIGN
+        Kp = _bucket(adds.shape[0])
+        out = _chain_jit(_pad_axis(base, 0, Wp),
+                         _pad_axis(_pad_axis(adds, 1, Wp), 0, Kp),
+                         _pad_axis(_pad_axis(dels, 1, Wp), 0, Kp))
+        return out[:W]
     if impl == "pallas":
         return delta_apply_chain_pallas(base, adds, dels, block_w=block_w,
                                         interpret=interpret)
@@ -38,8 +71,41 @@ def delta_apply_chain_batched(bases: jnp.ndarray, adds: jnp.ndarray,
     ``B`` sequential chain calls.
     """
     if impl == "xla":
-        return jax.vmap(delta_apply_chain_ref)(bases, adds, dels)
+        B, K, W = adds.shape
+        Wp = -(-W // _W_ALIGN) * _W_ALIGN
+        Bp, Kp = _bucket(B), _bucket(K)
+        out = _chain_batched_jit(
+            _pad_axis(_pad_axis(bases, 1, Wp), 0, Bp),
+            _pad_axis(_pad_axis(_pad_axis(adds, 2, Wp), 1, Kp), 0, Bp),
+            _pad_axis(_pad_axis(_pad_axis(dels, 2, Wp), 1, Kp), 0, Bp))
+        return out[:B, :W]
     if impl == "pallas":
         return jax.vmap(lambda b, a, d: delta_apply_chain_pallas(
             b, a, d, block_w=block_w, interpret=interpret))(bases, adds, dels)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def delta_apply_chain_prefix(base: jnp.ndarray, adds: jnp.ndarray,
+                             dels: jnp.ndarray) -> jnp.ndarray:
+    """All K intermediate chain states ``[K, W]`` (``out[i]`` = state after
+    delta ``i``).  The temporal engine's multi-interval path vmaps this
+    over stacked intervals — every prefix is a returned snapshot bitmap,
+    so (unlike :func:`delta_apply_chain`) there is no fused-kernel variant:
+    each word is genuinely written once per step either way."""
+    return delta_apply_chain_prefix_ref(base, adds, dels)
+
+
+def delta_apply_chain_prefix_batched(bases: jnp.ndarray, adds: jnp.ndarray,
+                                     dels: jnp.ndarray) -> jnp.ndarray:
+    """Vmapped prefix chains: ``bases [B, W]``, ``adds/dels [B, K, W]`` →
+    ``[B, K, W]`` per-timepoint bitmaps for B intervals in one pass.
+    Shape-bucketed and jit'd like :func:`delta_apply_chain_batched`; the
+    padded identity rows repeat the final state and are sliced away."""
+    B, K, W = adds.shape
+    Wp = -(-W // _W_ALIGN) * _W_ALIGN
+    Bp, Kp = _bucket(B), _bucket(K)
+    out = _chain_prefix_batched_jit(
+        _pad_axis(_pad_axis(bases, 1, Wp), 0, Bp),
+        _pad_axis(_pad_axis(_pad_axis(adds, 2, Wp), 1, Kp), 0, Bp),
+        _pad_axis(_pad_axis(_pad_axis(dels, 2, Wp), 1, Kp), 0, Bp))
+    return out[:B, :K, :W]

@@ -24,3 +24,19 @@ def delta_apply_chain_ref(base: jnp.ndarray, adds: jnp.ndarray,
 
     out, _ = jax.lax.scan(step, base, (adds, dels))
     return out
+
+
+def delta_apply_chain_prefix_ref(base: jnp.ndarray, adds: jnp.ndarray,
+                                 dels: jnp.ndarray) -> jnp.ndarray:
+    """Emit every intermediate state of the chain: ``out[i] = m_{i+1}``
+    (shape ``[K, W]``).  Used by the multi-interval temporal path, where
+    each prefix *is* a query result (one bitmap per interval timepoint) —
+    unlike the final-state chain there is no redundant HBM traffic to
+    fuse away, every word is an output."""
+    def step(m, ad):
+        a, d = ad
+        m2 = (m & ~d) | a
+        return m2, m2
+
+    _, ys = jax.lax.scan(step, base, (adds, dels))
+    return ys

@@ -3,6 +3,10 @@
 * ``--mode snapshots`` — historical-snapshot traffic against a
   GraphManager with the workload-aware materialization advisor + snapshot
   cache enabled (the paper's retrieval service, core/materialize.py);
+* ``--mode evolve`` — interval-analytics traffic: evolutionary queries
+  (PageRank / components / density over dense timepoint intervals)
+  served by the incremental temporal engine (core/temporal.py) vs the
+  per-snapshot recompute loop;
 * ``--mode model`` (default) — batched autoregressive decode for LM archs
   (reduced config on CPU; the production mesh decode path is exercised by
   dryrun.py) and batched CTR scoring for DIN.
@@ -79,6 +83,45 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
     gm.close()
 
 
+def serve_evolve(n_events: int, intervals: int, points: int, op: str,
+                 seed: int = 0, window_frac: float = 0.05) -> None:
+    """Drive an evolutionary-query workload — ``intervals`` dense
+    ``points``-timepoint windows — through the incremental temporal
+    engine and the per-snapshot recompute loop, and report the speedup
+    (the serving configuration for evolution dashboards)."""
+    from ..core import GraphManager
+    from ..data.generators import churn_network, dense_intervals
+
+    uni, ev = churn_network(n_initial_edges=max(n_events // 12, 50),
+                            n_events=n_events, seed=seed)
+    tmax = int(ev.time[-1])
+    ivs = dense_intervals(tmax, intervals, points,
+                          window_frac=window_frac, seed=seed)
+
+    gm = GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
+                      diff_fn="intersection", cache_bytes=0)
+    # warm the jit compile cache for both engines so one-time compilation
+    # is not charged to whichever engine happens to run first
+    for engine_warm in (False, True):
+        gm.evolve(ivs[0][:3], op, incremental=engine_warm)
+    results = {}
+    for engine in ("recompute", "incremental"):
+        t0 = time.perf_counter()
+        iters = 0
+        for iv in ivs:
+            res = gm.evolve(iv, op, incremental=(engine == "incremental"))
+            if res.stats.get("solver_iters"):
+                iters += sum(res.stats["solver_iters"])
+        results[engine] = (time.perf_counter() - t0, iters)
+    q = intervals * points
+    for engine, (wall, iters) in results.items():
+        print(f"{engine:12s}: {wall / q * 1e6:8.1f} us/point "
+              f"({q / wall:8.0f} points/s, solver iters {iters})")
+    print(f"speedup x{results['recompute'][0] / results['incremental'][0]:.2f}"
+          f"  ({intervals} intervals x {points} points, op={op})")
+    gm.close()
+
+
 def serve_lm(arch: str, batch: int, prompt_len: int, gen: int) -> None:
     from ..models.transformer import model as tm
     cfg = reduced_config(arch)
@@ -142,7 +185,8 @@ def serve_din(batch: int) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("model", "snapshots"), default="model")
+    ap.add_argument("--mode", choices=("model", "snapshots", "evolve"),
+                    default="model")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
@@ -157,10 +201,20 @@ def main() -> None:
     ap.add_argument("--multipoint-batch", type=int, default=1,
                     help="snapshots mode: merge this many concurrent "
                          "queries into one batched get_snapshots plan")
+    ap.add_argument("--intervals", type=int, default=8,
+                    help="evolve mode: number of evolutionary queries")
+    ap.add_argument("--points", type=int, default=32,
+                    help="evolve mode: timepoints per interval")
+    ap.add_argument("--op", default="pagerank",
+                    choices=("pagerank", "components", "degree", "density",
+                             "masks"),
+                    help="evolve mode: incremental operator")
     args = ap.parse_args()
     if args.mode == "snapshots":
         serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
                         batch=args.multipoint_batch)
+    elif args.mode == "evolve":
+        serve_evolve(args.events, args.intervals, args.points, args.op)
     elif family_of(args.arch) == "recsys":
         serve_din(args.batch)
     else:

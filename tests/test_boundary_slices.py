@@ -1,0 +1,123 @@
+"""Regression tests for interval slicing at exact leaf boundaries.
+
+Audit outcome (this PR): every ``EventList.search_time`` call site —
+``deltagraph._virtual_edges`` / ``_chain_edges`` (cost fractions),
+``executor.ApplyRecent`` (recent slicing), ``events.replay`` — follows
+one convention: a slice ``(lo, hi]`` selects rows with
+``lo < time <= hi`` via ``side="right"`` searches, which *is* the
+inclusive-upper/exclusive-lower bound planning assumes; the one
+inclusive-*start* lookup (``get_interval``'s first covering leaf) was
+expressed as ``_leaf_for_time(ts - 1)`` arithmetic and is now the
+explicit ``side="left"`` search ``_first_leaf_covering``.  These tests
+pin the exact-boundary behavior — duplicate timestamps straddling a
+leaf cut are the canonical off-by-one trap — so a future regression to
+mixed conventions fails loudly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphManager, replay
+from repro.core.events import (EV_NEW_EDGE, EV_NEW_NODE, EV_TRANS_EDGE,
+                               EV_TRANS_NODE)
+from repro.core.query import NO_ATTRS, parse_attr_options
+from repro.data.generators import random_history
+
+# max_time_step=1 forces many duplicate timestamps, so leaf cuts land
+# *inside* runs of equal times — the regression scenario
+SEEDS = [0, 1, 2, 3, 4, 11, 23]
+
+
+def _gm(seed, L=16):
+    uni, ev = random_history(140, seed, max_time_step=1)
+    return uni, ev, GraphManager(uni, ev, L=L, k=2, cache_bytes=0,
+                                 prefetch_workers=0)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_snapshots_at_exact_leaf_boundaries(seed):
+    uni, ev, gm = _gm(seed)
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    times = sorted({int(t) for lt in gm.dg.leaf_time
+                    for t in (lt - 1, lt, lt + 1)})
+    for t in times:
+        truth = replay(uni, ev, t)
+        got = gm.dg.get_snapshot(t, opts, pool=gm.pool)
+        assert truth.equal(got), (seed, t)
+    # multipoint plans chain partial-eventlist slices between exact
+    # boundary times — same answer required
+    multi = gm.dg.get_snapshots(times[:6], opts, pool=gm.pool)
+    for t in times[:6]:
+        assert replay(uni, ev, t).equal(multi[t]), (seed, t)
+    gm.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_get_interval_inclusive_start_at_boundaries(seed):
+    """[ts, te) interval semantics against a brute-force oracle, with both
+    endpoints swept across exact leaf-boundary times."""
+    uni, ev, gm = _gm(seed)
+    lt = gm.dg.leaf_time
+    pairs = [(lt[i], lt[j]) for i in range(len(lt))
+             for j in range(i, len(lt))][:30]
+    pairs += [(lt[i], lt[i] + 1) for i in range(len(lt))]
+    for ts, te in pairs:
+        res = gm.dg.get_interval(int(ts), int(te))
+        m = (ev.time >= ts) & (ev.time < te)
+        na = np.unique(ev.slot[m & (ev.etype == EV_NEW_NODE)]).astype(np.int32)
+        ea = np.unique(ev.slot[m & (ev.etype == EV_NEW_EDGE)]).astype(np.int32)
+        n_tr = int((m & np.isin(ev.etype,
+                                (EV_TRANS_EDGE, EV_TRANS_NODE))).sum())
+        assert np.array_equal(res["node_added"], na), (seed, ts, te)
+        assert np.array_equal(res["edge_added"], ea), (seed, ts, te)
+        assert res["transient_slot"].size == n_tr, (seed, ts, te)
+    gm.close()
+
+
+def test_first_leaf_covering_is_side_left():
+    """The explicit side="left" lookup must agree with the legacy
+    ``_leaf_for_time(ts - 1)`` arithmetic at every timestamp, and the
+    returned eventlist must be the first that can hold rows >= ts."""
+    uni, ev, gm = _gm(5)
+    dg = gm.dg
+    tmax = int(ev.time[-1])
+    for ts in range(-2, tmax + 3):
+        assert dg._first_leaf_covering(ts) == dg._leaf_for_time(ts - 1), ts
+        li = dg._first_leaf_covering(ts)
+        # no earlier eventlist may contain a row with time >= ts
+        if li > 0:
+            assert dg.leaf_time[li] < ts or li == len(dg.leaf_nids) - 1
+    gm.close()
+
+
+def test_recent_region_boundary_slices():
+    """Timepoints at/around the last leaf boundary and inside the recent
+    (unindexed) region, where slicing runs on the in-memory eventlist."""
+    uni, ev, gm = _gm(9, L=48)  # 140 events, L=48 -> recent tail exists
+    assert len(gm.dg.recent), "fixture must leave a recent tail"
+    t_last = gm.dg.leaf_time[-1]
+    tmax = int(ev.time[-1])
+    times = sorted({t_last - 1, t_last, t_last + 1, tmax - 1, tmax, tmax + 1})
+    opts = parse_attr_options("+node:all+edge:all", uni)
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert truth.equal(gm.dg.get_snapshot(t, opts, pool=gm.pool)), t
+    multi = gm.dg.get_snapshots(times, NO_ATTRS, pool=gm.pool)
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(multi[t].node_mask, truth.node_mask), t
+        assert np.array_equal(multi[t].edge_mask, truth.edge_mask), t
+    gm.close()
+
+
+def test_evolve_slices_at_boundaries():
+    """The temporal engine's (lo, hi] slices across leaf cuts reproduce
+    the oracle at every boundary timepoint."""
+    uni, ev, gm = _gm(13)
+    times = sorted({int(t) for lt in gm.dg.leaf_time
+                    for t in (lt, lt + 1)})
+    res = gm.evolve(times, "masks")
+    for t, (nm, em) in res:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(nm, truth.node_mask), t
+        assert np.array_equal(em, truth.edge_mask), t
+    gm.close()

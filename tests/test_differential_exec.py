@@ -1,0 +1,158 @@
+"""Differential test harness for the three-backend retrieval stack.
+
+Random event streams are executed through every backend and the results
+must coincide *exactly* (masks) or within the solvers' convergence
+tolerance (PageRank):
+
+* **host**        — ``DeltaGraph.get_snapshots`` (HostExecutor over the
+  plan IR, numpy states);
+* **jax**         — ``execute_ir_jax`` (vmapped batched bitmap chains
+  over the same IR);
+* **incremental** — ``GraphManager.evolve`` (one planned retrieval +
+  inter-snapshot event-slice advancement, ``core/temporal.py``), plus the
+  batched device variant ``evolve_intervals_jax``;
+
+all four against the brute-force ``replay`` oracle.
+
+The seeded sweep below always runs (``N_EXAMPLES`` ≥ 200 examples, no
+optional deps); when ``hypothesis`` is installed an additional
+generative pass explores the same property with minimized
+counterexamples.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import GraphManager, replay
+from repro.core.query import NO_ATTRS
+from repro.data.generators import random_history
+from repro.runtime.jax_exec import evolve_intervals_jax, execute_ir_jax
+
+N_EXAMPLES = 200
+CHUNK = 25          # seeds per parametrized case (progress + isolation)
+ALGO_EVERY = 20     # PageRank/CC differential on every 20th example
+                    # (fixpoint solvers jit-compile per universe shape —
+                    # masks stay cheap, so they carry the 200-example sweep)
+
+
+def _case_times(rng, gm, ev) -> list[int]:
+    """Query timepoints: random draws plus exact leaf boundaries (the
+    historically risky off-by-one sites) plus the recent region."""
+    tmax = int(ev.time[-1]) if len(ev) else 0
+    times = [int(t) for t in rng.integers(-1, tmax + 2, 4)]
+    lt = gm.dg.leaf_time
+    if len(lt) > 1:
+        li = int(rng.integers(1, len(lt)))
+        times += [int(lt[li]), int(lt[li]) + 1]
+    times.append(tmax)
+    return sorted(dict.fromkeys(times))
+
+
+def _build(seed: int) -> tuple:
+    rng = np.random.default_rng(seed)
+    n_events = int(rng.integers(40, 120))
+    uni, ev = random_history(n_events, seed,
+                             max_time_step=int(rng.integers(1, 3)))
+    gm = GraphManager(uni, ev, L=int(rng.choice([8, 16, 32])),
+                      k=int(rng.choice([2, 3])), cache_bytes=0,
+                      prefetch_workers=0)
+    return rng, uni, ev, gm
+
+
+def _check_masks(seed: int) -> None:
+    rng, uni, ev, gm = _build(seed)
+    times = _case_times(rng, gm, ev)
+
+    host = gm.dg.get_snapshots(times, NO_ATTRS, pool=gm.pool)
+    ir = gm.dg.plan_multipoint(times, NO_ATTRS, True)
+    jx = execute_ir_jax(gm.dg, ir, pool=gm.pool)
+    inc = gm.evolve(times, "masks")
+    cut = max(1, len(times) // 2)
+    dev = evolve_intervals_jax(gm.dg, [times[:cut], times[cut - 1:]],
+                               pool=gm.pool)
+    dev_flat = {t: m for d in dev for t, m in d.items()}
+
+    for i, t in enumerate(times):
+        truth = replay(uni, ev, t)
+        for name, (nm, em) in (
+                ("host", (host[t].node_mask, host[t].edge_mask)),
+                ("jax", jx[t]),
+                ("incremental", inc.values[i]),
+                ("jax-interval", dev_flat[t])):
+            assert np.array_equal(nm, truth.node_mask), (seed, t, name)
+            assert np.array_equal(em, truth.edge_mask), (seed, t, name)
+    gm.close()
+
+
+def _check_algorithms(seed: int) -> None:
+    """Incremental PageRank/CC vs per-snapshot recompute at the same
+    convergence criterion: labels exactly equal, ranks within fp tol."""
+    rng, uni, ev, gm = _build(seed)
+    times = _case_times(rng, gm, ev)
+
+    pr_inc = gm.evolve(times, "pagerank", tol=1e-9)
+    pr_rec = gm.evolve(times, "pagerank", tol=1e-9, incremental=False)
+    for t, a, b in zip(times, pr_inc.values, pr_rec.values):
+        assert np.allclose(a, b, atol=1e-5), (seed, t, np.abs(a - b).max())
+
+    cc_inc = gm.evolve(times, "components")
+    cc_rec = gm.evolve(times, "components", incremental=False)
+    for t, a, b in zip(times, cc_inc.values, cc_rec.values):
+        assert np.array_equal(a, b), (seed, t)
+
+    deg_inc = gm.evolve(times, "degree")
+    deg_rec = gm.evolve(times, "degree", incremental=False)
+    for t, a, b in zip(times, deg_inc.values, deg_rec.values):
+        assert np.array_equal(a, b), (seed, t)
+    gm.close()
+
+
+@pytest.mark.parametrize("chunk", range(N_EXAMPLES // CHUNK))
+def test_differential_masks_and_algorithms(chunk):
+    for seed in range(chunk * CHUNK, (chunk + 1) * CHUNK):
+        _check_masks(seed)
+        if seed % ALGO_EVERY == 0:
+            _check_algorithms(seed)
+
+
+def test_differential_with_attrs():
+    """Host backend with full attribute options stays the oracle the
+    structure-only backends are differenced against."""
+    for seed in (7, 77):
+        rng, uni, ev, gm = _build(seed)
+        from repro.core.query import parse_attr_options
+        opts = parse_attr_options("+node:all+edge:all", uni)
+        times = _case_times(rng, gm, ev)
+        host = gm.dg.get_snapshots(times, opts, pool=gm.pool)
+        inc = gm.evolve(times, "masks", attr_options=opts)
+        for i, t in enumerate(times):
+            truth = replay(uni, ev, t)
+            assert truth.equal(host[t]), (seed, t)
+            assert np.array_equal(inc.values[i][0], truth.node_mask)
+            assert np.array_equal(inc.values[i][1], truth.edge_mask)
+        gm.close()
+
+
+# -- optional generative pass (hypothesis) ----------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 10**6))
+    def test_differential_hypothesis(seed):
+        _check_masks(seed)
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 10**6))
+    def test_differential_hypothesis_algorithms(seed):
+        _check_algorithms(seed)

@@ -1,0 +1,167 @@
+"""Concurrency stress for the retrieval stack.
+
+16 threads drive overlapping ``get_snapshots`` batches (and
+``BatchScheduler`` runs) against one shared GraphManager — shared
+snapshot cache, shared prefetch pool, shared KV store.  Assertions:
+
+* no deadlock (every thread joins within the timeout) and no worker
+  exceptions;
+* every returned state equals the brute-force oracle (the cache never
+  serves a torn or aliased entry);
+* ``KVStats`` counters are exactly consistent with an independently
+  locked count of the physical gets (unlocked ``+=`` would drop
+  increments under this contention);
+* snapshot-cache dependency tracking: after advisor evictions, no
+  surviving cache entry references an evicted pin.
+
+Advisor *replans* mutate the GraphPool and are serialized by
+``GraphManager._advisor_lock``; in-flight plans that already resolved a
+pin are not protected (documented in ARCHITECTURE.md "Concurrency"), so
+the eviction-invalidation assertions run in the quiesced phase.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core import GraphManager, replay
+from repro.core.query import NO_ATTRS
+from repro.data.generators import churn_network
+from repro.runtime.executor import BatchScheduler, RetrievalRequest
+from repro.storage.kv import MemKV
+
+N_THREADS = 16
+BATCHES_PER_THREAD = 6
+JOIN_TIMEOUT_S = 120.0
+
+
+class CountingKV(MemKV):
+    """MemKV plus an independently-locked physical-get counter to
+    difference against the built-in (also locked) ``KVStats``."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._count_lock = threading.Lock()
+        self.physical_gets = 0
+
+    def get(self, key):
+        with self._count_lock:
+            self.physical_gets += 1
+        return super().get(key)
+
+
+def _fixture():
+    uni, ev = churn_network(n_initial_edges=120, n_events=1500, seed=21)
+    store = CountingKV()
+    gm = GraphManager(uni, ev, store=store, L=64, k=2, prefetch_workers=4)
+    tmax = int(ev.time[-1])
+    rng = np.random.default_rng(5)
+    distinct = sorted({int(t) for t in rng.integers(0, tmax + 1, 40)})
+    truth = {t: replay(uni, ev, t) for t in distinct}
+    return uni, ev, store, gm, distinct, truth, rng
+
+
+def _run_threads(workers):
+    threads = [threading.Thread(target=w, daemon=True) for w in workers]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=JOIN_TIMEOUT_S)
+    assert not any(th.is_alive() for th in threads), \
+        "deadlock: worker threads did not finish"
+
+
+def test_concurrent_get_snapshots_stress():
+    uni, ev, store, gm, distinct, truth, rng = _fixture()
+    errors: list = []
+    barrier = threading.Barrier(N_THREADS)
+    batches = [[list(rng.choice(distinct, size=6))
+                for _ in range(BATCHES_PER_THREAD)]
+               for _ in range(N_THREADS)]
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=JOIN_TIMEOUT_S)
+            for batch in batches[i]:
+                out = gm.get_snapshots(batch)
+                for t in batch:
+                    st = out[int(t)]
+                    tr = truth[int(t)]
+                    assert np.array_equal(st.node_mask, tr.node_mask), t
+                    assert np.array_equal(st.edge_mask, tr.edge_mask), t
+        except Exception as e:  # noqa: BLE001 - surfaced via main thread
+            errors.append((i, repr(e)))
+
+    _run_threads([lambda i=i: worker(i) for i in range(N_THREADS)])
+    assert errors == []
+    # KVStats counters must not have dropped increments under contention
+    assert store.stats.gets == store.physical_gets
+    assert gm.cache is not None and len(gm.cache) <= gm.cache.max_entries
+    # every (deduped) query was either a cache hit or recorded in the
+    # histogram — no increment may be lost under contention
+    wl = gm.workload
+    expected = sum(len({int(t) for t in b}) for tb in batches for b in tb)
+    assert wl.num_queries + wl.cache_hits == expected
+    gm.close()
+
+
+def test_concurrent_batch_scheduler_stress():
+    uni, ev, store, gm, distinct, truth, rng = _fixture()
+    errors: list = []
+    barrier = threading.Barrier(N_THREADS)
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=JOIN_TIMEOUT_S)
+            sched = BatchScheduler(gm.dg, pool=gm.pool,
+                                   prefetcher=gm.prefetcher)
+            reqs = [RetrievalRequest(times=list(
+                rng.choice(distinct, size=3))) for _ in range(3)]
+            for res, req in zip(sched.run(reqs, NO_ATTRS), reqs):
+                for t in req.times:
+                    tr = truth[int(t)]
+                    assert np.array_equal(res[int(t)].node_mask,
+                                          tr.node_mask), t
+                    assert np.array_equal(res[int(t)].edge_mask,
+                                          tr.edge_mask), t
+        except Exception as e:  # noqa: BLE001
+            errors.append((i, repr(e)))
+
+    _run_threads([lambda i=i: worker(i) for i in range(N_THREADS)])
+    assert errors == []
+    assert store.stats.gets == store.physical_gets
+    gm.close()
+
+
+def test_cache_deps_invalidated_on_advisor_evict():
+    """Entries whose plans routed through an advisor pin are dropped when
+    the pin is evicted — surviving deps may only reference live pins."""
+    uni, ev, store, gm, distinct, truth, rng = _fixture()
+    gm.enable_advisor(budget_bytes=2 << 20, replan_every=10**9)
+    for t in distinct:
+        st = gm.get_snapshot(t)
+        assert np.array_equal(st.node_mask, truth[t].node_mask), t
+    pinned_before = set(gm.advisor.pinned)
+    assert pinned_before, "advisor must have pinned something"
+    # some cached entries should record pin dependencies
+    deps_before = gm.cache.dep_keys()
+    assert any(d & pinned_before for d in deps_before.values())
+
+    # shrinking the budget to ~zero evicts every pin -> dependent entries go
+    gm.advisor.replan(budget_bytes=1)
+    live_pins = set(gm.advisor.pinned)
+    evicted = pinned_before - live_pins
+    assert evicted
+    for key, deps in gm.cache.dep_keys().items():
+        assert not (deps & evicted), (key, deps & evicted)
+    # hits after the purge still serve oracle-exact states
+    for t in distinct[:10]:
+        st = gm.get_snapshot(t)
+        assert np.array_equal(st.node_mask, truth[t].node_mask), t
+        assert np.array_equal(st.edge_mask, truth[t].edge_mask), t
+    gm.disable_advisor()
+    # with the advisor fully off, no entry may reference any former pin
+    for key, deps in gm.cache.dep_keys().items():
+        assert not (deps & pinned_before), key
+    gm.close()

@@ -51,3 +51,102 @@ def test_time_expression_parse_and_eval():
         TimeExpression.parse("t0 &", [1])
     with pytest.raises(ValueError):
         TimeExpression.parse("t5", [1, 2])
+
+
+# ---------------------------------------------------------------------------
+# property-based round-trip: random expression trees -> infix -> parse
+# ---------------------------------------------------------------------------
+
+N_TIMES = 4
+
+
+def _random_tree(rng: np.random.Generator, depth: int) -> tuple:
+    r = rng.random()
+    if depth <= 0 or r < 0.3:
+        return ("t", int(rng.integers(0, N_TIMES)))
+    if r < 0.45:
+        return ("not", _random_tree(rng, depth - 1))
+    op = "and" if r < 0.75 else "or"
+    return (op, _random_tree(rng, depth - 1), _random_tree(rng, depth - 1))
+
+
+def _check_roundtrip(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    times = list(range(10, 10 * (N_TIMES + 1), 10))
+    tex = TimeExpression(times, _random_tree(rng, int(rng.integers(1, 6))))
+    text = tex.to_infix()
+    back = TimeExpression.parse(text, times)
+    # exact tree equality: to_infix emits minimal parens matching the
+    # grammar's associativity, so the parse must reproduce the tree...
+    assert back.expr == tex.expr, (seed, text)
+    # ...and therefore evaluate identically on random masks
+    masks = [rng.random(8) < 0.5 for _ in range(N_TIMES)]
+    assert np.array_equal(back.evaluate(masks), tex.evaluate(masks)), text
+
+
+def test_time_expression_roundtrip_seeded():
+    for seed in range(150):
+        _check_roundtrip(seed)
+
+
+def test_time_expression_precedence():
+    # ~ binds tighter than &, & tighter than |; both left-associative
+    tex = TimeExpression.parse("t0 | t1 & ~t2 | t3", [1, 2, 3, 4])
+    assert tex.expr == ("or", ("or", ("t", 0),
+                               ("and", ("t", 1), ("not", ("t", 2)))),
+                        ("t", 3))
+    assert TimeExpression.parse("t0 & t1 & t2", [1, 2, 3]).expr == \
+        ("and", ("and", ("t", 0), ("t", 1)), ("t", 2))
+    # round-trip keeps minimal parens but full fidelity
+    assert TimeExpression.parse(tex.to_infix(), tex.times).expr == tex.expr
+
+
+def _mutate(rng: np.random.Generator, text: str) -> str:
+    ops = ["drop", "dup", "insert", "paren"]
+    kind = ops[int(rng.integers(0, len(ops)))]
+    if not text:
+        return "&"
+    i = int(rng.integers(0, len(text)))
+    if kind == "drop":
+        return text[:i] + text[i + 1:]
+    if kind == "dup":
+        return text[:i] + text[i] + text[i:]
+    if kind == "insert":
+        return text[:i] + rng.choice(list("&|~()#")) + text[i:]
+    return "(" + text  # unbalanced paren
+
+
+def test_time_expression_malformed_inputs():
+    """Random mutations of valid expressions either reparse to *some*
+    valid tree or raise ValueError — never crash differently or hang."""
+    times = list(range(10, 10 * (N_TIMES + 1), 10))
+    rng = np.random.default_rng(0)
+    rejected = 0
+    for seed in range(120):
+        tex = TimeExpression(times, _random_tree(rng, 3))
+        bad = _mutate(rng, tex.to_infix())
+        try:
+            TimeExpression.parse(bad, times)
+        except ValueError:
+            rejected += 1
+    assert rejected > 20  # mutations must actually exercise the error paths
+    for text in ["", "t0 &", "& t0", "(t0", "t0)", "t0 t1", "~", "t9",
+                 "t0 || t1", "()", "x0 & t1"]:
+        with pytest.raises(ValueError):
+            TimeExpression.parse(text, times)
+
+
+# -- optional generative pass (hypothesis) ----------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(seed=st.integers(0, 10**9))
+    def test_time_expression_roundtrip_hypothesis(seed):
+        _check_roundtrip(seed)
