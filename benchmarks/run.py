@@ -18,12 +18,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (materialize_bench, paper_figs, retrieval_bench,
-                   roofline_report, temporal_bench)
+                   roofline_report, storage_bench, temporal_bench)
 
     benches = [
         materialize_bench.bench_materialize,
         retrieval_bench.bench_retrieval,
         temporal_bench.bench_temporal,
+        storage_bench.bench_storage,
         paper_figs.fig6_vs_copylog,
         paper_figs.fig7_vs_interval_tree,
         paper_figs.fig8a_graphpool_memory,

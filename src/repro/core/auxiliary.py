@@ -117,6 +117,46 @@ class AuxHistoryIndex:
         # events kept for the residual tail within a leaf eventlist
         self._events = events
 
+    # -- persistence ---------------------------------------------------------
+    # aux leaf snapshots ride the same codec-compressed, checksummed blob
+    # path as every other payload, keyed ``(0, -10, "aux.<name>")`` next to
+    # the skeleton's reserved ids
+    _AUX_PID = -10
+
+    def save(self, store: KVStore | None = None) -> int:
+        """Persist the leaf aux-snapshots; returns bytes written.
+        Snapshot values must be JSON-representable (numpy scalars are
+        coerced; tuples round-trip as lists)."""
+        import json as _json
+
+        def _coerce(o):
+            if isinstance(o, np.integer):
+                return int(o)
+            if isinstance(o, np.floating):
+                return float(o)
+            raise TypeError(f"aux snapshot value {o!r} is not "
+                            f"JSON-representable")
+
+        store = store if store is not None else self.dg.store
+        payload = _json.dumps({"name": self.aux.name,
+                               "leaf_snaps": self._leaf_snaps},
+                              default=_coerce).encode()
+        blob = col.pack_arrays(
+            {"json": np.frombuffer(payload, np.uint8)})
+        store.put((0, self._AUX_PID, f"aux.{self.aux.name}"), blob)
+        return len(blob)
+
+    @classmethod
+    def load_snaps(cls, store: KVStore, name: str) -> list[AuxSnapshot]:
+        """Decode a persisted aux index's leaf snapshots (standalone — the
+        residual-tail replay still needs the event trace)."""
+        import json as _json
+
+        blob = store.get((0, cls._AUX_PID, f"aux.{name}"))
+        arrays = col.unpack_arrays(blob)
+        payload = _json.loads(bytes(arrays["json"]).decode())
+        return payload["leaf_snaps"]
+
     # -- queries -------------------------------------------------------------
     def snapshot_at(self, t: int) -> AuxSnapshot:
         li = self.dg._leaf_for_time(t)

@@ -46,6 +46,16 @@ Plan = PlanIR
 
 SUPERROOT = 0
 
+# Decode-aware plan cost model: traversing an edge costs
+# ``α·stored_bytes + β·logical_bytes`` — fetching a payload moves its
+# *stored* (compressed, at-rest) bytes over the store, while decoding it
+# back into arrays costs roughly its *logical* (decoded) bytes.  In-memory
+# event replay (the recent eventlist / CURRENT crossings) has no fetch
+# half, so it is priced at β·logical only.  With the raw codec
+# stored == logical and the model degrades to the paper's bytes-fetched.
+COST_ALPHA_STORED = 1.0
+COST_BETA_DECODE = 0.15
+
 # ---------------------------------------------------------------------------
 # skeleton
 # ---------------------------------------------------------------------------
@@ -72,31 +82,45 @@ class EdgeInfo:
     dst: int
     kind: str                      # 'delta' | 'elist'
     payload_id: int
-    w_struct: int = 0              # bytes
-    w_nodeattr: np.ndarray | None = None   # int64[A_n] bytes per column
+    w_struct: int = 0              # stored (at-rest, compressed) bytes
+    w_nodeattr: np.ndarray | None = None   # int64[A_n] stored bytes per column
     w_edgeattr: np.ndarray | None = None
     n_events: int = 0              # elist edges: struct event count
     is_cap: bool = False           # part of the tear-down-able right spine
+    w_struct_logical: int = 0      # decoded (raw array) bytes
+    w_nodeattr_logical: np.ndarray | None = None
+    w_edgeattr_logical: np.ndarray | None = None
 
     def weight(self, options: AttrOptions, frac: float = 1.0,
                backward: bool = False) -> float:
-        """Bytes to fetch+apply for this edge under the given attr options.
+        """Cost to fetch+decode+apply this edge under the given options:
+        ``α·stored + β·logical`` bytes (``COST_ALPHA_STORED`` /
+        ``COST_BETA_DECODE``) — the planner prices compressed payloads by
+        what they actually move over the store *and* what they cost to
+        decode back into arrays.
 
         Backward traversal of *eventlist* edges cannot restore attributes of
         elements whose attribute events lie before the traversed window
         (deleted-element revival), so it is priced at +inf for attribute-
         carrying queries; structure-only backward traversal is exact.
         """
-        w = float(self.w_struct)
         if options.wants_attrs and self.kind == "elist" and backward:
             return float("inf")
+        stored = float(self.w_struct)
+        logical = float(self.w_struct_logical)
         if options.wants_node and self.w_nodeattr is not None and self.w_nodeattr.size:
             cols = [c for c in options.node_cols if c < self.w_nodeattr.size]
-            w += float(self.w_nodeattr[cols].sum())
+            stored += float(self.w_nodeattr[cols].sum())
+            if (self.w_nodeattr_logical is not None
+                    and self.w_nodeattr_logical.size):
+                logical += float(self.w_nodeattr_logical[cols].sum())
         if options.wants_edge and self.w_edgeattr is not None and self.w_edgeattr.size:
             cols = [c for c in options.edge_cols if c < self.w_edgeattr.size]
-            w += float(self.w_edgeattr[cols].sum())
-        return w * frac
+            stored += float(self.w_edgeattr[cols].sum())
+            if (self.w_edgeattr_logical is not None
+                    and self.w_edgeattr_logical.size):
+                logical += float(self.w_edgeattr_logical[cols].sum())
+        return (COST_ALPHA_STORED * stored + COST_BETA_DECODE * logical) * frac
 
 
 class DeltaGraph:
@@ -288,12 +312,15 @@ class DeltaGraph:
     def _add_delta_edge(self, src: int, dst: int, d: Delta, cap: bool) -> int:
         pid = self._next_payload
         self._next_payload += 1
-        wn, we = self._store_delta(pid, d)
+        wn, we, wnl, wel, struct_stored = self._store_delta(pid, d)
         eid = self._next_eid
         self._next_eid += 1
         self._add_edge(EdgeInfo(eid, src, dst, "delta", pid,
-                                w_struct=d.struct_nbytes(),
-                                w_nodeattr=wn, w_edgeattr=we, is_cap=cap))
+                                w_struct=struct_stored,
+                                w_nodeattr=wn, w_edgeattr=we, is_cap=cap,
+                                w_struct_logical=d.struct_nbytes(),
+                                w_nodeattr_logical=wnl,
+                                w_edgeattr_logical=wel))
         if cap:
             self._cap_edges.append(eid)
         return eid
@@ -302,27 +329,39 @@ class DeltaGraph:
         part = self._hp(a.slot, self.P)
         return [np.nonzero(part == p)[0] for p in range(self.P)]
 
-    def _store_delta(self, pid: int, d: Delta) -> tuple[np.ndarray, np.ndarray]:
+    def _store_delta(self, pid: int, d: Delta):
+        """Encode + persist one delta's components; returns the per-column
+        stored (at-rest blob) and logical (decoded array) byte tallies the
+        planner's decode-aware cost model weighs."""
         A_n = self.universe.num_node_attrs
         A_e = self.universe.num_edge_attrs
         wn = np.zeros(A_n, np.int64)
         we = np.zeros(A_e, np.int64)
+        wn_lg = np.zeros(A_n, np.int64)
+        we_lg = np.zeros(A_e, np.int64)
+        struct_stored = 0
         for p in range(self.P):
             sub = self._partition_delta(d, p)
-            self.store.put((p, pid, col.STRUCT), col.encode_delta_struct(sub))
+            b = col.encode_delta_struct(sub)
+            struct_stored += len(b)
+            self.store.put((p, pid, col.STRUCT), b)
             for c in range(A_n):
                 m = sub.node_attr.col == c
                 ad = AttrDelta(sub.node_attr.slot[m], sub.node_attr.col[m],
                                sub.node_attr.new[m], sub.node_attr.old[m])
-                wn[c] += ad.nbytes()
-                self.store.put((p, pid, f"{col.NODEATTR}.{c}"), col.encode_attr(ad))
+                b = col.encode_attr(ad)
+                wn[c] += len(b)
+                wn_lg[c] += ad.nbytes()
+                self.store.put((p, pid, f"{col.NODEATTR}.{c}"), b)
             for c in range(A_e):
                 m = sub.edge_attr.col == c
                 ad = AttrDelta(sub.edge_attr.slot[m], sub.edge_attr.col[m],
                                sub.edge_attr.new[m], sub.edge_attr.old[m])
-                we[c] += ad.nbytes()
-                self.store.put((p, pid, f"{col.EDGEATTR}.{c}"), col.encode_attr(ad))
-        return wn, we
+                b = col.encode_attr(ad)
+                we[c] += len(b)
+                we_lg[c] += ad.nbytes()
+                self.store.put((p, pid, f"{col.EDGEATTR}.{c}"), b)
+        return wn, we, wn_lg, we_lg, struct_stored
 
     def _partition_delta(self, d: Delta, p: int) -> Delta:
         if self.P == 1:
@@ -345,36 +384,44 @@ class DeltaGraph:
         A_e = self.universe.num_edge_attrs
         wn = np.zeros(A_n, np.int64)
         we = np.zeros(A_e, np.int64)
+        wn_lg = np.zeros(A_n, np.int64)
+        we_lg = np.zeros(A_e, np.int64)
         n_struct = 0
         w_struct = 0
+        w_struct_lg = 0
         hp = self._hp
         part_all = hp(ev.slot, self.P)
         for p in range(self.P):
             sub = ev[part_all == p] if self.P > 1 else ev
-            parts = col.encode_eventlist(sub)
-            # re-key attr components per column
-            dec_na = col.unpack_arrays(parts[col.ELIST_NODEATTR])
-            dec_ea = col.unpack_arrays(parts[col.ELIST_EDGEATTR])
-            self.store.put((p, pid, col.ELIST_STRUCT), parts[col.ELIST_STRUCT])
-            self.store.put((p, pid, col.ELIST_TRANSIENT), parts[col.ELIST_TRANSIENT])
-            n_struct += col.unpack_arrays(parts[col.ELIST_STRUCT])["slot"].size
-            w_struct += len(parts[col.ELIST_STRUCT])
-            for c in range(A_n):
-                m = dec_na["col"] == c
-                b = col.pack_arrays({k: v[m] for k, v in dec_na.items()})
-                wn[c] += len(b)
-                self.store.put((p, pid, f"{col.ELIST_NODEATTR}.{c}"), b)
-            for c in range(A_e):
-                m = dec_ea["col"] == c
-                b = col.pack_arrays({k: v[m] for k, v in dec_ea.items()})
-                we[c] += len(b)
-                self.store.put((p, pid, f"{col.ELIST_EDGEATTR}.{c}"), b)
+            # component *arrays* (pre-encode) — attr components re-key per
+            # column without decoding a just-encoded blob
+            comps = col.eventlist_components(sub)
+            b_struct = col.pack_arrays(comps[col.ELIST_STRUCT])
+            self.store.put((p, pid, col.ELIST_STRUCT), b_struct)
+            self.store.put((p, pid, col.ELIST_TRANSIENT),
+                           col.pack_arrays(comps[col.ELIST_TRANSIENT]))
+            n_struct += comps[col.ELIST_STRUCT]["slot"].size
+            w_struct += len(b_struct)
+            w_struct_lg += col.logical_nbytes(comps[col.ELIST_STRUCT])
+            for base, ws, ws_lg, A in ((col.ELIST_NODEATTR, wn, wn_lg, A_n),
+                                       (col.ELIST_EDGEATTR, we, we_lg, A_e)):
+                arrays = comps[base]
+                for c in range(A):
+                    m = arrays["col"] == c
+                    sub_arrays = {k: v[m] for k, v in arrays.items()}
+                    b = col.pack_arrays(sub_arrays)
+                    ws[c] += len(b)
+                    ws_lg[c] += col.logical_nbytes(sub_arrays)
+                    self.store.put((p, pid, f"{base}.{c}"), b)
         eid = self._next_eid
         self._next_eid += 1
         # dst is the leaf about to be emitted (nid of next node)
         self._add_edge(EdgeInfo(eid, left_leaf_nid, self._next_nid, "elist",
                                 pid, w_struct=w_struct, w_nodeattr=wn,
-                                w_edgeattr=we, n_events=len(ev)))
+                                w_edgeattr=we, n_events=len(ev),
+                                w_struct_logical=w_struct_lg,
+                                w_nodeattr_logical=wn_lg,
+                                w_edgeattr_logical=we_lg))
 
     def _delete_payload(self, pid: int, comps, attrs: bool) -> None:
         for p in range(self.P):
@@ -387,32 +434,66 @@ class DeltaGraph:
                     self.store.delete((p, pid, f"{col.EDGEATTR}.{c}"))
 
     # ----------------------------------------------------------------- stats
+    @staticmethod
+    def _edge_total_bytes(e: EdgeInfo, stored: bool) -> int:
+        if stored:
+            w = e.w_struct
+            wn, we = e.w_nodeattr, e.w_edgeattr
+        else:
+            w = e.w_struct_logical
+            wn, we = e.w_nodeattr_logical, e.w_edgeattr_logical
+        if wn is not None:
+            w += int(wn.sum())
+        if we is not None:
+            w += int(we.sum())
+        return int(w)
+
     def skeleton_stats(self) -> dict:
+        """Index-size report.  ``*_bytes`` fields are *logical* (decoded
+        array) bytes — what the §5 analytical models predict; the
+        ``stored_*`` mirrors report at-rest bytes after the payload codec,
+        and ``compression_ratio`` is their quotient (per level and
+        overall).  With the raw codec the two coincide up to blob-header
+        overhead."""
         per_level: dict[int, int] = {}
         per_level_nocap: dict[int, int] = {}
         struct_nocap: dict[int, int] = {}
+        stored_level: dict[int, int] = {}
         for e in self.edges.values():
             if e.kind == "delta":
                 lvl = self.nodes[e.src].level if e.src != SUPERROOT else -1
-                w = e.w_struct
-                if e.w_nodeattr is not None:
-                    w += int(e.w_nodeattr.sum())
-                if e.w_edgeattr is not None:
-                    w += int(e.w_edgeattr.sum())
+                w = self._edge_total_bytes(e, stored=False)
                 per_level[lvl] = per_level.get(lvl, 0) + w
+                stored_level[lvl] = (stored_level.get(lvl, 0)
+                                     + self._edge_total_bytes(e, stored=True))
                 if not e.is_cap:
                     per_level_nocap[lvl] = per_level_nocap.get(lvl, 0) + w
-                    struct_nocap[lvl] = struct_nocap.get(lvl, 0) + e.w_struct
+                    struct_nocap[lvl] = (struct_nocap.get(lvl, 0)
+                                         + e.w_struct_logical)
         total_delta = sum(per_level.values())
-        total_elist = sum(e.w_struct + int(e.w_nodeattr.sum()) + int(e.w_edgeattr.sum())
-                          for e in self.edges.values() if e.kind == "elist")
+        stored_delta = sum(stored_level.values())
+        elists = [e for e in self.edges.values() if e.kind == "elist"]
+        total_elist = sum(self._edge_total_bytes(e, stored=False)
+                          for e in elists)
+        stored_elist = sum(self._edge_total_bytes(e, stored=True)
+                           for e in elists)
+        total = total_delta + total_elist
+        stored_total = stored_delta + stored_elist
         return {"num_nodes": len(self.nodes), "num_edges": len(self.edges),
                 "num_leaves": len(self.leaf_nids),
                 "delta_bytes_per_level": per_level,
                 "delta_bytes_per_level_nocap": per_level_nocap,
                 "struct_bytes_per_level_nocap": struct_nocap,
                 "delta_bytes": total_delta, "eventlist_bytes": total_elist,
-                "total_bytes": total_delta + total_elist}
+                "total_bytes": total,
+                "stored_delta_bytes_per_level": stored_level,
+                "stored_delta_bytes": stored_delta,
+                "stored_eventlist_bytes": stored_elist,
+                "stored_total_bytes": stored_total,
+                "compression_ratio_per_level": {
+                    lvl: per_level[lvl] / max(stored_level.get(lvl, 0), 1)
+                    for lvl in per_level},
+                "compression_ratio": total / max(stored_total, 1)}
 
     # ------------------------------------------------------------- planning
     def _leaf_for_time(self, t: int) -> int:
@@ -445,6 +526,11 @@ class DeltaGraph:
         i1 = min(self._leaf_for_time(hi), len(self.leaf_nids) - 2)
         return list(range(i0, i1 + 1))
 
+    def _recent_cost(self, frac: float = 1.0) -> float:
+        """Applying a slice of the in-memory recent eventlist has no fetch
+        half — β·logical bytes, same units as :meth:`EdgeInfo.weight`."""
+        return COST_BETA_DECODE * self.recent.nbytes() * frac
+
     def _virtual_edges(self, t: int, options: AttrOptions):
         """Edges connecting the virtual node S_t to the skeleton (§4.3).
 
@@ -474,9 +560,9 @@ class DeltaGraph:
                 frac = cut / n
                 out.append((self.leaf_nids[li],
                             ("recent", None, True, (NEG, t)),
-                            self.recent.nbytes() * frac))
+                            self._recent_cost(frac)))
                 wb = (float("inf") if options.wants_attrs
-                      else self.recent.nbytes() * (1 - frac))
+                      else self._recent_cost(1 - frac))
                 out.append(("CURRENT", ("recent", None, False, (t, POS)), wb))
             else:
                 out.append((self.leaf_nids[li], ("noop", None, True, None), 0.0))
@@ -504,7 +590,7 @@ class DeltaGraph:
                 frac = (self.recent.search_time(tb) - self.recent.search_time(ta)) / n
                 virtuals[("t", tb)].append(
                     (("t", ta), ("recent", None, True, (ta, tb)),
-                     self.recent.nbytes() * frac))
+                     self._recent_cost(frac)))
 
     def _leaf_elist_eid(self, leaf_index: int) -> int:
         a, b = self.leaf_nids[leaf_index], self.leaf_nids[leaf_index + 1]
@@ -553,7 +639,7 @@ class DeltaGraph:
         if use_current and self.leaf_nids and not options.wants_attrs:
             # CURRENT = last leaf + recent events; crossing it backward
             # restores the last leaf (structure-only, §6)
-            w = float(self.recent.nbytes())
+            w = self._recent_cost()
             vadj.setdefault("CURRENT", []).append(
                 (self.leaf_nids[-1], ("recent", None, False, None), w))
             vadj.setdefault(self.leaf_nids[-1], []).append(
@@ -930,7 +1016,8 @@ class DeltaGraph:
             "total_events": self._total_events,
             "nodes": [dataclasses.asdict(n) for n in self.nodes.values()],
             "edges": [{**dataclasses.asdict(e),
-                       "w_nodeattr": None, "w_edgeattr": None}
+                       "w_nodeattr": None, "w_edgeattr": None,
+                       "w_nodeattr_logical": None, "w_edgeattr_logical": None}
                       for e in self.edges.values()],
         }
         arrays = {}
@@ -939,6 +1026,10 @@ class DeltaGraph:
                 arrays[f"wn{e.eid}"] = e.w_nodeattr
             if e.w_edgeattr is not None:
                 arrays[f"we{e.eid}"] = e.w_edgeattr
+            if e.w_nodeattr_logical is not None:
+                arrays[f"wnl{e.eid}"] = e.w_nodeattr_logical
+            if e.w_edgeattr_logical is not None:
+                arrays[f"wel{e.eid}"] = e.w_edgeattr_logical
         arrays["json"] = np.frombuffer(json.dumps(payload).encode(), np.uint8)
         self.store.put((0, -1, "skeleton"), col.pack_arrays(arrays))
 
@@ -966,8 +1057,13 @@ class DeltaGraph:
             dg.adj[info.nid] = []
         dg.edges = {}
         for ed in payload["edges"]:
+            # skeletons saved before the codec layer lack the logical-byte
+            # fields — EdgeInfo defaults keep them loadable (decode cost
+            # simply prices as zero until a rebuild)
             e = EdgeInfo(**ed)
             e.w_nodeattr = arrays.get(f"wn{e.eid}")
             e.w_edgeattr = arrays.get(f"we{e.eid}")
+            e.w_nodeattr_logical = arrays.get(f"wnl{e.eid}")
+            e.w_edgeattr_logical = arrays.get(f"wel{e.eid}")
             dg._add_edge(e)
         return dg

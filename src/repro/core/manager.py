@@ -16,7 +16,7 @@ from typing import Any, Sequence
 import numpy as np
 
 from ..graph.csr import CSR, build_csr
-from ..storage.kv import KVStore, MemKV
+from ..storage.kv import KVStore, MemKV, store_from_env
 from .analysis import estimate_rates
 from .deltagraph import DeltaGraph
 from .events import EventList, GraphUniverse, MaterializedState, replay
@@ -119,7 +119,12 @@ class GraphManager:
                  cache_entries: int = 256,
                  prefetch_workers: int = 4) -> None:
         self.universe = universe
-        self.store = store if store is not None else MemKV()
+        # default store honors REPRO_KV (mem | logfile | tiered) so every
+        # entry point can run disk-resident without code changes; stores we
+        # created are closed with the manager
+        self._owns_store = store is None
+        self.store = store if store is not None else (store_from_env()
+                                                      or MemKV())
         self.dg = DeltaGraph(universe, self.store, L=L, k=k, diff_fn=diff_fn,
                              diff_params=diff_params,
                              num_partitions=num_partitions,
@@ -151,9 +156,13 @@ class GraphManager:
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
         """Shut down the prefetch thread pool (idempotent; threads only
-        exist if a batched retrieval ran)."""
+        exist if a batched retrieval ran) and any store this manager
+        created itself (flushes disk-backed tiers)."""
         if self.prefetcher is not None:
-            self.prefetcher.close()
+            # drain in-flight fetches before the store's handles go away
+            self.prefetcher.close(wait=self._owns_store)
+        if self._owns_store:
+            self.store.close()
 
     def __enter__(self) -> "GraphManager":
         return self

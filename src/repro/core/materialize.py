@@ -14,8 +14,11 @@ fixed-depth by-hand version.  This module makes the policy *adaptive*:
   into the :class:`~repro.core.graphpool.GraphPool` under a byte budget
   (``GraphPool.memory_bytes()`` is the meter).  The benefit of pinning node
   ``c`` for queries landing at leaf ``ℓ`` is the Dijkstra-distance saving
-  ``max(0, d_cur(ℓ) − d_c(ℓ))`` in fetch-bytes — exactly the quantity the
-  planner minimizes, so advised pins shorten real plans by construction
+  ``max(0, d_cur(ℓ) − d_c(ℓ))`` in the planner's decode-aware cost units
+  (α·stored + β·decoded bytes, :meth:`EdgeInfo.weight`) — exactly the
+  quantity the planner minimizes, so advised pins shorten real plans by
+  construction; the budget side stays in resident logical bytes (pins live
+  decoded in the pool)
   (materialized nodes become distance-0 sources in ``_sources``).  Weights
   come from the workload histogram, with the §5 analytical models
   (:func:`~repro.core.analysis.estimate_rates` → uniform expected path
@@ -321,7 +324,14 @@ class AdvisorConfig:
 
 @dataclasses.dataclass
 class Advice:
-    """One planning round's outcome."""
+    """One planning round's outcome.
+
+    ``expected_*`` are in the planner's decode-aware cost units
+    (``α·stored + β·logical`` bytes — :meth:`EdgeInfo.weight`), so the
+    benefit side of the knapsack automatically credits compression: a pin
+    saves what its subtree's queries would have *fetched and decoded*.
+    The cost side (``pool_bytes_*``, the budget meter) stays in resident
+    logical bytes — pinned states live decoded in the GraphPool."""
     chosen: list[int]                  # skeleton nids to pin (final set)
     added: list[int]
     evicted: list[int]
@@ -329,6 +339,7 @@ class Advice:
     expected_cold_bytes: float         # Σ weight·d_cold
     pool_bytes_before: int = 0
     pool_bytes_after: int = 0
+    cost_model: dict | None = None     # {"alpha_stored": α, "beta_decode": β}
 
 
 class MaterializationAdvisor:
@@ -465,10 +476,13 @@ class MaterializationAdvisor:
 
         added = [c for c in chosen if c not in self.pinned]
         evicted = [c for c in self.pinned if c not in chosen]
+        from .deltagraph import COST_ALPHA_STORED, COST_BETA_DECODE
         return Advice(chosen, added, evicted,
                       expected_saved_bytes=saved,
                       expected_cold_bytes=cold_cost or self._cold_prior_bytes(),
-                      pool_bytes_before=spent_pool)
+                      pool_bytes_before=spent_pool,
+                      cost_model={"alpha_stored": COST_ALPHA_STORED,
+                                  "beta_decode": COST_BETA_DECODE})
 
     def apply(self, advice: Advice,
               budget_bytes: int | None = None) -> Advice:

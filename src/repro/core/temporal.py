@@ -115,7 +115,7 @@ class IntervalSlicer:
         self.options = options
         self.prefetcher = prefetcher
         self._comps: dict[int, dict] = {}      # leaf index -> decoded comps
-        self._futs: dict[int, tuple] = {}      # leaf index -> (keys, future)
+        self._futs: dict[int, object] = {}     # leaf index -> decode future
 
     def prefetch_interval(self, lo: int, hi: int) -> None:
         if self.prefetcher is None:
@@ -125,15 +125,18 @@ class IntervalSlicer:
                 continue
             e = self.dg.edges[self.dg._leaf_elist_eid(i)]
             keys = self.dg._elist_keys(e.payload_id, self.options)
-            self._futs[i] = (keys, self.prefetcher.submit(keys))
+            # fetch *and* decode in the worker thread — the per-point
+            # analytics loop consumes ready component arrays
+            self._futs[i] = self.prefetcher.submit(
+                keys, decode=lambda blobs, keys=keys:
+                    self.dg._decode_elist(keys, blobs))
 
     def _leaf_comps(self, i: int) -> dict:
         comps = self._comps.get(i)
         if comps is None:
             fut = self._futs.pop(i, None)
             if fut is not None:
-                keys, f = fut
-                comps = self.dg._decode_elist(keys, f.result())
+                comps = fut.result()
             else:
                 e = self.dg.edges[self.dg._leaf_elist_eid(i)]
                 comps = self.dg._fetch_elist(e.payload_id, self.options)

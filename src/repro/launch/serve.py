@@ -26,17 +26,30 @@ from ..models import common as mc
 
 
 def serve_snapshots(n_events: int, budget_mb: float, queries: int,
-                    zipf: float, seed: int = 0, batch: int = 1) -> None:
+                    zipf: float, seed: int = 0, batch: int = 1,
+                    codec: str = "v2", kv: str = "mem",
+                    kv_dir: str | None = None,
+                    hot_mb: float = 8.0) -> None:
     """Drive a recency-skewed snapshot workload and report cold vs advised
     latency plus cache hit rate — the quickstart for the advisor.
 
     ``batch > 1`` groups concurrent queries into ``get_snapshots`` calls:
     one merged multipoint plan per group (shared prefixes fetch and apply
     once) executed with async KV prefetch — the serving configuration for
-    a query *stream* rather than a query at a time."""
+    a query *stream* rather than a query at a time.
+
+    ``codec`` picks the payload wire format (``v2`` compressed+checksummed
+    or legacy ``raw``); ``kv`` picks the store tier (``mem`` | ``logfile``
+    | ``tiered`` = ``hot_mb`` in-memory blob cache over a log file under
+    ``kv_dir``) — the storage-config quickstart in the README."""
+    import os as _os
+
     from ..core import GraphManager
     from ..data.generators import churn_network
+    from ..storage import codec as codec_mod
+    from ..storage.kv import TieredKV, make_store
 
+    codec_mod.set_default_codec(codec)
     uni, ev = churn_network(n_initial_edges=max(n_events // 12, 50),
                             n_events=n_events, seed=seed)
     tmax = int(ev.time[-1])
@@ -48,14 +61,29 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
         1, distinct.size, queries)
     ts = distinct[distinct.size - 1 - np.minimum(ranks, distinct.size - 1)]
 
-    with GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
+    # explicitly-passed stores are not owned by the manager — close them
+    # here so disk-backed tiers flush their log tail + index durably
+    made_stores = []
+
+    def _store(tag: str):
+        if kv == "mem":
+            s = make_store("mem")
+        else:
+            d = _os.path.join(kv_dir, tag) if kv_dir else None
+            s = make_store(kv, directory=d, hot_bytes=int(hot_mb * 2**20))
+        made_stores.append(s)
+        return s
+
+    with GraphManager(uni, ev, store=_store("cold"),
+                      L=max(n_events // 40, 64), k=2,
                       diff_fn="intersection", cache_bytes=0) as cold:
         t0 = time.perf_counter()
         for t in ts:
             cold.dg.get_snapshot(int(t), pool=cold.pool)
         cold_s = time.perf_counter() - t0
 
-    gm = GraphManager(uni, ev, L=max(n_events // 40, 64), k=2,
+    gm = GraphManager(uni, ev, store=_store("advised"),
+                      L=max(n_events // 40, 64), k=2,
                       diff_fn="intersection")
     advice = gm.enable_advisor(budget_bytes=int(budget_mb * 2**20),
                                replan_every=max(queries // 8, 32))
@@ -79,8 +107,23 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
           f"({gm.cache.nbytes() / 2**20:.2f} MiB)")
     if advice is not None:
         print(f"warm-start expected saving: {advice.expected_saved_bytes:.0f}"
-              f" / {advice.expected_cold_bytes:.0f} plan-bytes")
+              f" / {advice.expected_cold_bytes:.0f} plan-cost units")
+    sk = gm.dg.skeleton_stats()
+    print(f"store   : codec={codec} kv={kv} "
+          f"stored={sk['stored_total_bytes'] / 2**20:.2f} MiB "
+          f"logical={sk['total_bytes'] / 2**20:.2f} MiB "
+          f"(x{sk['compression_ratio']:.2f})")
+    st = gm.store.stats
+    if isinstance(gm.store, TieredKV):
+        print(f"tier    : hot {gm.store.hot_bytes_used() / 2**20:.2f}"
+              f"/{gm.store.hot_bytes / 2**20:.2f} MiB  "
+              f"hits={st.hot_hits} misses={st.hot_misses} "
+              f"evictions={gm.store.evictions} "
+              f"cold gets={gm.store.cold.stats.gets}")
+    print(f"kv      : {st.gets} gets, {st.bytes_read / 2**20:.2f} MiB read")
     gm.close()
+    for s in made_stores:
+        s.close()
 
 
 def serve_evolve(n_events: int, intervals: int, points: int, op: str,
@@ -201,6 +244,18 @@ def main() -> None:
     ap.add_argument("--multipoint-batch", type=int, default=1,
                     help="snapshots mode: merge this many concurrent "
                          "queries into one batched get_snapshots plan")
+    ap.add_argument("--codec", choices=("v2", "raw"), default="v2",
+                    help="payload codec: v2 (compressed+checksummed) or "
+                         "legacy raw")
+    ap.add_argument("--kv", choices=("mem", "logfile", "tiered"),
+                    default="mem",
+                    help="snapshots mode: store tier (tiered = hot blob "
+                         "cache over a log file)")
+    ap.add_argument("--kv-dir", default=None,
+                    help="directory for logfile/tiered stores "
+                         "(default: fresh temp dir)")
+    ap.add_argument("--hot-mb", type=float, default=8.0,
+                    help="tiered store: hot-tier byte budget")
     ap.add_argument("--intervals", type=int, default=8,
                     help="evolve mode: number of evolutionary queries")
     ap.add_argument("--points", type=int, default=32,
@@ -212,7 +267,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.mode == "snapshots":
         serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
-                        batch=args.multipoint_batch)
+                        batch=args.multipoint_batch, codec=args.codec,
+                        kv=args.kv, kv_dir=args.kv_dir, hot_mb=args.hot_mb)
     elif args.mode == "evolve":
         serve_evolve(args.events, args.intervals, args.points, args.op)
     elif family_of(args.arch) == "recsys":

@@ -49,11 +49,14 @@ if TYPE_CHECKING:  # pragma: no cover
 
 
 class Prefetcher:
-    """Thread-pooled async multi-get over a KV store.
+    """Thread-pooled async multi-get (+ decode) over a KV store.
 
     ``submit(keys)`` returns a future resolving to the blob list (``None``
-    for missing components, matching ``DeltaGraph._mget``).  The store's
-    stats counters are lock-protected (``storage.kv.KVStats``), so
+    for missing components, matching ``DeltaGraph._mget``); with a
+    ``decode`` callable the worker thread also runs the codec-layer
+    decompression/deserialization, so the future resolves straight to the
+    decoded payload and the apply thread never touches raw blobs.  The
+    store's stats counters are lock-protected (``storage.kv.KVStats``), so
     concurrent prefetch threads account bytes correctly.
     """
 
@@ -71,14 +74,23 @@ class Prefetcher:
                     thread_name_prefix="kv-prefetch")
             return self._pool
 
-    def submit(self, keys: list) -> "Future[list]":
+    def submit(self, keys: list, decode=None) -> "Future":
         from ..storage.kv import mget_optional
-        return self._ensure_pool().submit(mget_optional, self.store, keys)
+        store = self.store
 
-    def close(self) -> None:
+        def _work():
+            blobs = mget_optional(store, keys)
+            return decode(blobs) if decode is not None else blobs
+
+        return self._ensure_pool().submit(_work)
+
+    def close(self, wait: bool = False) -> None:
+        """``wait=True`` drains in-flight fetches first — required before
+        closing the underlying store (a worker mid-get would otherwise
+        read from closed file handles)."""
         with self._lock:
             if self._pool is not None:
-                self._pool.shutdown(wait=False)
+                self._pool.shutdown(wait=wait)
                 self._pool = None
 
     def __enter__(self) -> "Prefetcher":
@@ -126,9 +138,9 @@ class HostExecutor:
 
         # fetches are issued a bounded window ahead of the apply cursor
         # (plan order == application order): enough in flight to overlap
-        # every store get with application, without ever holding more than
-        # ~window payloads' raw blobs resident.  Decoded payloads are
-        # dropped after their last consumer, so peak memory stays a
+        # every store get *and decode* with application, without ever
+        # holding more than ~window payloads resident.  Decoded payloads
+        # are dropped after their last consumer, so peak memory stays a
         # window deep — not the whole merged plan's KV traffic.
         pending: dict[int, tuple] = {}     # fetch nid -> (keys, meta)
         futures: dict[int, Any] = {}       # fetch nid -> in-flight future
@@ -154,7 +166,14 @@ class HostExecutor:
                 nid = fetch_order[next_submit]
                 next_submit += 1
                 if nid in pending:      # not consumed out of order yet
-                    futures[nid] = self.prefetcher.submit(pending[nid][0])
+                    keys, meta = pending[nid]
+                    op = byid[nid].op
+                    # decode runs inside the prefetch worker: the future
+                    # resolves to arrays, not raw blobs
+                    futures[nid] = self.prefetcher.submit(
+                        keys,
+                        decode=lambda blobs, op=op, keys=keys, meta=meta:
+                            self._decode(op, keys, meta, blobs))
 
         if window:
             top_up()
@@ -165,8 +184,11 @@ class HostExecutor:
             if nid not in payloads:
                 keys, meta = pending.pop(nid)
                 fut = futures.pop(nid, None)
-                blobs = fut.result() if fut is not None else dg._mget(keys)
-                payloads[nid] = self._decode(byid[nid].op, keys, meta, blobs)
+                if fut is not None:
+                    payloads[nid] = fut.result()   # decoded off-thread
+                else:
+                    payloads[nid] = self._decode(byid[nid].op, keys, meta,
+                                                 dg._mget(keys))
                 if window:
                     top_up()
             out = payloads[nid]

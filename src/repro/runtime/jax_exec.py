@@ -189,9 +189,10 @@ def _node_pair(dg: DeltaGraph, op, get_payload) -> tuple[np.ndarray, ...]:
 def _make_payload_resolver(dg: DeltaGraph, ir: Plan, prefetch):
     """Memoized payload access for the structure-only backend; with a
     Prefetcher, every Fetch node's (small, struct-component) key list is
-    submitted up front so store gets overlap kernel execution."""
+    submitted up front — the worker threads fetch *and decode* the blobs,
+    so store gets and codec decompression both overlap kernel execution
+    and the host-fetch path consumes ready arrays."""
     futs: dict[tuple, Any] = {}
-    keymeta: dict[tuple, tuple] = {}
     if prefetch is not None:
         for n in ir.nodes:
             if not isinstance(n.op, planir.Fetch):
@@ -202,10 +203,13 @@ def _make_payload_resolver(dg: DeltaGraph, ir: Plan, prefetch):
             if n.op.kind == "delta":
                 keys, na, ea = dg._delta_keys(n.op.pid, NO_ATTRS)
                 allk, meta = keys + na + ea, (len(keys), len(na))
+                decode = (lambda blobs, meta=meta:
+                          dg._decode_delta(blobs, *meta))
             else:
-                allk, meta = dg._elist_keys(n.op.pid, NO_ATTRS), None
-            keymeta[fk] = (allk, meta)
-            futs[fk] = prefetch.submit(allk)
+                allk = dg._elist_keys(n.op.pid, NO_ATTRS)
+                decode = (lambda blobs, allk=allk:
+                          dg._decode_elist(allk, blobs))
+            futs[fk] = prefetch.submit(allk, decode=decode)
     payloads: dict[tuple, Any] = {}
 
     def get_payload(kind: str, pid: int):
@@ -213,11 +217,7 @@ def _make_payload_resolver(dg: DeltaGraph, ir: Plan, prefetch):
         if fk not in payloads:
             fut = futs.pop(fk, None)
             if fut is not None:
-                allk, meta = keymeta.pop(fk)
-                blobs = fut.result()
-                payloads[fk] = (dg._decode_delta(blobs, *meta)
-                                if kind == "delta"
-                                else dg._decode_elist(allk, blobs))
+                payloads[fk] = fut.result()   # decoded in the worker
             else:
                 payloads[fk] = (dg._fetch_delta(pid, NO_ATTRS)
                                 if kind == "delta"

@@ -14,12 +14,14 @@ and each leaf-eventlist into:
 * ``elist_edgeattr``  — ... of UEA events
 * ``elist_transient`` — (time, etype, slot) of transient events
 
-The wire format is a tiny self-describing array bundle (name, dtype, shape,
-raw bytes) — no pickling, so any language/storage system could read it.
+The wire format is owned by :mod:`repro.storage.codec`: a self-
+describing array bundle, by default compressed + checksummed behind a
+versioned header (``v2``), with the original raw bundle as the
+always-decodable fallback.  ``pack_arrays``/``unpack_arrays`` are the
+single (en|de)code chokepoint for every persisted payload — deltas,
+eventlists, checkpoints, baselines, the skeleton.
 """
 from __future__ import annotations
-
-import struct as _struct
 
 import numpy as np
 
@@ -27,6 +29,7 @@ from ..core.deltas import AttrDelta, Delta
 from ..core.events import (EV_DEL_EDGE, EV_DEL_NODE, EV_NEW_EDGE, EV_NEW_NODE,
                            EV_TRANS_EDGE, EV_TRANS_NODE, EV_UPD_EDGE_ATTR,
                            EV_UPD_NODE_ATTR, EventList)
+from . import codec
 
 STRUCT = "struct"
 NODEATTR = "nodeattr"
@@ -41,42 +44,25 @@ ELIST_COMPONENTS = (ELIST_STRUCT, ELIST_NODEATTR, ELIST_EDGEATTR, ELIST_TRANSIEN
 
 
 # ---------------------------------------------------------------------------
-# array-bundle wire format
+# array-bundle wire format (delegates to the codec layer)
 # ---------------------------------------------------------------------------
 
 def pack_arrays(arrays: dict[str, np.ndarray]) -> bytes:
-    out = [_struct.pack("<I", len(arrays))]
-    for name, a in arrays.items():
-        a = np.ascontiguousarray(a)
-        nb = name.encode()
-        # dtype.str is '<V2' for ml_dtypes types (bfloat16 &c.) — the name
-        # round-trips through np.dtype() once ml_dtypes is imported
-        ds = a.dtype.str
-        dt = (a.dtype.name if ds.startswith(("<V", "|V", ">V")) else ds).encode()
-        out.append(_struct.pack("<I", len(nb)) + nb)
-        out.append(_struct.pack("<I", len(dt)) + dt)
-        out.append(_struct.pack("<I", a.ndim) + _struct.pack(f"<{a.ndim}q", *a.shape))
-        raw = a.tobytes()
-        out.append(_struct.pack("<Q", len(raw)) + raw)
-    return b"".join(out)
+    """Encode an array bundle with the session's default codec
+    (:func:`repro.storage.codec.get_default_codec`)."""
+    return codec.encode_blob(arrays)
 
 
 def unpack_arrays(data: bytes) -> dict[str, np.ndarray]:
-    pos = 0
-    (n,) = _struct.unpack_from("<I", data, pos); pos += 4
-    out: dict[str, np.ndarray] = {}
-    for _ in range(n):
-        (ln,) = _struct.unpack_from("<I", data, pos); pos += 4
-        name = data[pos:pos + ln].decode(); pos += ln
-        (ld,) = _struct.unpack_from("<I", data, pos); pos += 4
-        dt = data[pos:pos + ld].decode(); pos += ld
-        (nd,) = _struct.unpack_from("<I", data, pos); pos += 4
-        shape = _struct.unpack_from(f"<{nd}q", data, pos); pos += 8 * nd
-        (nraw,) = _struct.unpack_from("<Q", data, pos); pos += 8
-        a = np.frombuffer(data[pos:pos + nraw], dtype=np.dtype(dt)).reshape(shape)
-        pos += nraw
-        out[name] = a
-    return out
+    """Decode any blob ever written — v2 by magic sniff, raw fallback.
+    Raises :class:`repro.storage.codec.CodecError` on corrupt input."""
+    return codec.decode_blob(data)
+
+
+def logical_nbytes(arrays: dict[str, np.ndarray]) -> int:
+    """Decoded (in-memory) size of a bundle — the codec-independent half
+    of the planner's stored-vs-logical cost split."""
+    return int(sum(int(a.nbytes) for a in arrays.values()))
 
 
 # ---------------------------------------------------------------------------
@@ -118,7 +104,10 @@ def decode_delta(parts: dict[str, bytes]) -> Delta:
 # eventlist components
 # ---------------------------------------------------------------------------
 
-def encode_eventlist(ev: EventList) -> dict[str, bytes]:
+def eventlist_components(ev: EventList) -> dict[str, dict[str, np.ndarray]]:
+    """Split a leaf-eventlist into its columnar component *arrays* (the
+    pre-encode form: callers that re-key per attribute column slice these
+    directly instead of decoding a just-encoded blob)."""
     et = ev.etype
     m_struct = np.isin(et, (EV_NEW_NODE, EV_DEL_NODE, EV_NEW_EDGE, EV_DEL_EDGE))
     m_na = et == EV_UPD_NODE_ATTR
@@ -128,18 +117,23 @@ def encode_eventlist(ev: EventList) -> dict[str, bytes]:
     # be replayed per-component without a global merge.
     pos = np.arange(len(ev), dtype=np.int32)
 
-    def sub(mask, with_attr: bool) -> bytes:
+    def sub(mask, with_attr: bool) -> dict[str, np.ndarray]:
         arrays = {"pos": pos[mask], "time": ev.time[mask],
                   "etype": et[mask], "slot": ev.slot[mask]}
         if with_attr:
             arrays.update({"col": ev.attr_col[mask], "new": ev.value[mask],
                            "old": ev.old_value[mask]})
-        return pack_arrays(arrays)
+        return arrays
 
     return {ELIST_STRUCT: sub(m_struct, False),
             ELIST_NODEATTR: sub(m_na, True),
             ELIST_EDGEATTR: sub(m_ea, True),
             ELIST_TRANSIENT: sub(m_tr, False)}
+
+
+def encode_eventlist(ev: EventList) -> dict[str, bytes]:
+    return {name: pack_arrays(arrays)
+            for name, arrays in eventlist_components(ev).items()}
 
 
 def decode_eventlist(parts: dict[str, bytes]) -> dict[str, dict[str, np.ndarray]]:

@@ -4,25 +4,44 @@ The paper stores every delta / eventlist component under the key
 ``⟨partition_id, delta_id, component⟩`` in Kyoto Cabinet, and notes that any
 get/put store (HBase, Cassandra, ...) can be plugged in.  We keep exactly
 that contract: keys are ``(partition_id: int, delta_id: int, component:
-str)``, values are opaque bytes.  Three backends:
+str)``, values are opaque bytes.  Four backends:
 
 * :class:`MemKV` — dict-backed (the "cloud cache" stand-in; also used by
   unit tests).
 * :class:`LogFileKV` — a single append-only log + JSON offset index per
   directory.  Append-only gives crash-safe writes (torn tails are dropped on
   recovery) — this is also what the fault-tolerant checkpointer builds on.
+  Deletes and overwrites leave dead records; :meth:`LogFileKV.compact`
+  rewrites the live set and atomically swaps the log (auto-triggered by a
+  dead-bytes ratio), so the store no longer grows without bound.
+* :class:`TieredKV` — a byte-budgeted hot in-memory blob cache over a cold
+  backend (typically :class:`LogFileKV`).  Blobs stay compressed-at-rest in
+  *both* tiers (the codec layer owns decompression), so the hot budget buys
+  ``compression_ratio×`` more working set than caching decoded arrays
+  would.  Admission is versioned: a get that races a concurrent overwrite
+  can never install — or serve, once the put returned — a stale blob.
 * :class:`PartitionedKV` — routes by ``partition_id`` to one backend per
   storage unit (the paper's one-Kyoto-instance-per-machine deployment).
 
 All backends record byte-level read/write counters so benchmarks can report
-fetched bytes (the planner's cost model is bytes fetched).
+fetched bytes (the planner's cost model is bytes fetched + decoded).
+
+``store_from_env()`` builds the default store for
+:class:`~repro.core.manager.GraphManager` from ``REPRO_KV``
+(``mem`` | ``logfile`` | ``tiered``), ``REPRO_KV_DIR`` and
+``REPRO_KV_HOT_MB`` — CI runs a test subset with ``REPRO_KV=logfile`` so
+the disk tier is exercised on every push.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
+import shutil
 import struct
+import tempfile
 import threading
+from collections import OrderedDict
 from typing import Iterable
 
 Key = tuple[int, int, str]
@@ -49,7 +68,12 @@ def mget_optional(store: "KVStore", keys: list) -> list:
 class KVStats:
     """Byte/op counters, lock-protected: the async prefetcher
     (``runtime/executor.py``) drives gets from a thread pool, and unlocked
-    ``+=`` would drop increments under contention."""
+    ``+=`` would drop increments under contention.
+
+    ``hot_hits`` / ``hot_misses`` are populated by tiered backends only:
+    every get is exactly one of the two, so
+    ``gets == hot_hits + hot_misses`` is a checkable invariant under
+    concurrency (``tests/test_executor_stress.py``)."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -57,11 +81,17 @@ class KVStats:
         self.puts = 0
         self.bytes_read = 0
         self.bytes_written = 0
+        self.hot_hits = 0
+        self.hot_misses = 0
 
-    def add_get(self, nbytes: int) -> None:
+    def add_get(self, nbytes: int, hot: bool | None = None) -> None:
         with self._lock:
             self.gets += 1
             self.bytes_read += nbytes
+            if hot is True:
+                self.hot_hits += 1
+            elif hot is False:
+                self.hot_misses += 1
 
     def add_put(self, nbytes: int) -> None:
         with self._lock:
@@ -72,6 +102,7 @@ class KVStats:
         with self._lock:
             self.gets = self.puts = 0
             self.bytes_read = self.bytes_written = 0
+            self.hot_hits = self.hot_misses = 0
 
 
 class AggregateKVStats:
@@ -101,6 +132,14 @@ class AggregateKVStats:
     @property
     def bytes_written(self) -> int:
         return self._sum("bytes_written")
+
+    @property
+    def hot_hits(self) -> int:
+        return self._sum("hot_hits")
+
+    @property
+    def hot_misses(self) -> int:
+        return self._sum("hot_misses")
 
     def reset(self) -> None:
         for p in self._parts:
@@ -170,28 +209,56 @@ class MemKV(KVStore):
 
 
 _MAGIC = b"RKV1"
+_TOMBSTONE = 0xFFFFFFFFFFFFFFFF   # vallen sentinel: a delete record
 
 
 class LogFileKV(KVStore):
     """Append-only log file + offset index.
 
-    Record layout: ``[u32 keylen][key utf8][u64 vallen][value bytes]``.
-    The index (`index.json`) is written on flush; on open, the log is
-    scanned from the last indexed offset so an unflushed-but-complete tail
-    is recovered and a torn (partially written) tail record is truncated —
-    the crash-consistency story for checkpointing.
+    Record layout: ``[magic][u32 keylen][key utf8][u64 vallen][value]``;
+    a ``vallen`` of ``_TOMBSTONE`` (no value bytes) records a delete, so
+    a full log scan reconstructs the exact live set — deletes are as
+    durable as puts and can never resurrect.  The index (`index.json`)
+    is written on flush; on open, the log is scanned from the last
+    indexed offset so an unflushed-but-complete tail is recovered and a
+    torn (partially written) tail record is truncated — the
+    crash-consistency story for checkpointing.
+
+    Overwrites and deletes strand dead records in the log;
+    ``_dead_bytes`` tracks the stranded volume and :meth:`compact`
+    reclaims it: live records are rewritten into ``kv.log.compact``
+    (fsynced), the on-disk index is *invalidated* (a stale index must
+    never pair with the new log's offsets), then ``os.replace`` swaps
+    the log in — the commit point — and a fresh index is written last.
+    A crash before the swap leaves a log whose full scan yields the old
+    live set (the stray ``.compact`` file is discarded on reopen); a
+    crash after it leaves the new log with no index, which recovery
+    rebuilds from a full scan — every window is crash-safe
+    (``tests/test_storage.py``).
     """
 
-    def __init__(self, directory: str) -> None:
+    def __init__(self, directory: str, *, auto_compact: bool = True,
+                 compact_ratio: float = 0.5,
+                 compact_min_bytes: int = 1 << 20) -> None:
         super().__init__()
         os.makedirs(directory, exist_ok=True)
         self.dir = directory
         self.log_path = os.path.join(directory, "kv.log")
         self.index_path = os.path.join(directory, "index.json")
+        self.auto_compact = bool(auto_compact)
+        self.compact_ratio = float(compact_ratio)
+        self.compact_min_bytes = int(compact_min_bytes)
+        self.compactions = 0
         self._index: dict[str, tuple[int, int]] = {}  # key -> (offset, length)
-        self._lock = threading.Lock()
+        # compact() runs under the same lock put/delete hold when they
+        # auto-trigger it — reentrant by design
+        self._lock = threading.RLock()
+        stray = self.log_path + ".compact"   # compaction that died pre-commit
+        if os.path.exists(stray):
+            os.remove(stray)
         self._recover()
         self._fh = open(self.log_path, "ab")
+        self._rfh = open(self.log_path, "rb")
 
     def _recover(self) -> None:
         indexed_end = 0
@@ -202,6 +269,8 @@ class LogFileKV(KVStore):
             indexed_end = payload["log_end"]
         if not os.path.exists(self.log_path):
             open(self.log_path, "wb").close()
+            self._log_size = 0
+            self._dead_bytes = 0
             return
         size = os.path.getsize(self.log_path)
         if size < indexed_end:  # corrupt index — rebuild from scratch
@@ -224,6 +293,11 @@ class LogFileKV(KVStore):
                     break
                 vlen = struct.unpack("<Q", vl)[0]
                 voff = pos + 8 + klen + 8
+                if vlen == _TOMBSTONE:       # delete record: no value bytes
+                    pos = voff
+                    self._index.pop(kb.decode(), None)
+                    good_end = pos
+                    continue
                 f.seek(vlen, os.SEEK_CUR)
                 pos = voff + vlen
                 if f.tell() != pos:
@@ -233,53 +307,333 @@ class LogFileKV(KVStore):
         if os.path.getsize(self.log_path) != good_end:
             with open(self.log_path, "r+b") as f:  # drop torn tail
                 f.truncate(good_end)
+        self._log_size = good_end
+        self._dead_bytes = max(0, good_end - self._live_bytes())
+
+    def _live_bytes(self) -> int:
+        return sum(self._rec_len(k, ln) for k, (_, ln) in self._index.items())
+
+    @staticmethod
+    def _rec_len(key_str: str, vlen: int) -> int:
+        return 8 + len(key_str.encode()) + 8 + vlen
+
+    @property
+    def dead_bytes(self) -> int:
+        return self._dead_bytes
+
+    def dead_ratio(self) -> float:
+        with self._lock:
+            return self._dead_bytes / max(self._log_size, 1)
 
     def put(self, key: Key, value: bytes) -> None:
-        ks = _key_str(key).encode()
+        ks = _key_str(key)
+        kb = ks.encode()
         with self._lock:
             self._fh.seek(0, os.SEEK_END)
             pos = self._fh.tell()
-            self._fh.write(_MAGIC + struct.pack("<I", len(ks)) + ks
+            self._fh.write(_MAGIC + struct.pack("<I", len(kb)) + kb
                            + struct.pack("<Q", len(value)) + value)
-            self._index[ks.decode()] = (pos + 8 + len(ks) + 8, len(value))
+            old = self._index.get(ks)
+            if old is not None:
+                self._dead_bytes += self._rec_len(ks, old[1])
+            self._index[ks] = (pos + 8 + len(kb) + 8, len(value))
+            self._log_size = pos + 8 + len(kb) + 8 + len(value)
+            self._maybe_compact()
         self.stats.add_put(len(value))
 
     def get(self, key: Key) -> bytes:
-        off, length = self._index[_key_str(key)]
+        # index lookup + file read under one lock: compact() swaps both
+        # the offsets and the backing file atomically w.r.t. readers
         with self._lock:
+            off, length = self._index[_key_str(key)]
             self._fh.flush()
-            with open(self.log_path, "rb") as f:
-                f.seek(off)
-                v = f.read(length)
+            self._rfh.seek(off)
+            v = self._rfh.read(length)
         self.stats.add_get(len(v))
         return v
 
     def delete(self, key: Key) -> None:
-        self._index.pop(_key_str(key), None)
+        ks = _key_str(key)
+        kb = ks.encode()
+        with self._lock:
+            old = self._index.pop(ks, None)
+            if old is None:
+                return
+            # tombstone record: a full log scan (index lost or rebuilt)
+            # must not resurrect the deleted key
+            self._fh.seek(0, os.SEEK_END)
+            pos = self._fh.tell()
+            self._fh.write(_MAGIC + struct.pack("<I", len(kb)) + kb
+                           + struct.pack("<Q", _TOMBSTONE))
+            self._log_size = pos + 8 + len(kb) + 8
+            # both the dead record and the tombstone itself are reclaimable
+            self._dead_bytes += (self._rec_len(ks, old[1])
+                                 + 8 + len(kb) + 8)
+            self._maybe_compact()
+
+    def _maybe_compact(self) -> None:
+        if (self.auto_compact
+                and self._dead_bytes >= self.compact_min_bytes
+                and self._dead_bytes >= self.compact_ratio
+                * max(self._log_size, 1)):
+            self.compact()
+
+    def compact(self) -> dict:
+        """Rewrite live records into a fresh log and atomically swap it in.
+        Returns ``{"live_bytes", "reclaimed_bytes"}``.
+
+        Runs synchronously under the store lock — readers stall for the
+        duration.  Serving deployments with large stores should pass
+        ``auto_compact=False`` and call this from a maintenance window
+        instead of letting a routine ``put`` absorb the rewrite."""
+        with self._lock:
+            self._fh.flush()
+            tmp_path = self.log_path + ".compact"
+            new_index: dict[str, tuple[int, int]] = {}
+            pos = 0
+            with open(tmp_path, "wb") as out:
+                for ks, (off, length) in sorted(self._index.items(),
+                                                key=lambda kv: kv[1][0]):
+                    self._rfh.seek(off)
+                    val = self._rfh.read(length)
+                    kb = ks.encode()
+                    out.write(_MAGIC + struct.pack("<I", len(kb)) + kb
+                              + struct.pack("<Q", length) + val)
+                    new_index[ks] = (pos + 8 + len(kb) + 8, length)
+                    pos += 8 + len(kb) + 8 + length
+                out.flush()
+                os.fsync(out.fileno())
+            reclaimed = self._log_size - pos
+            self._fh.close()
+            self._rfh.close()
+            committed = False
+            try:
+                # invalidate the on-disk index BEFORE the commit point: a
+                # stale index paired with the new log would serve wrong
+                # bytes at old offsets; with no index, recovery full-scans
+                # the log (exact — deletes are tombstoned records)
+                if os.path.exists(self.index_path):
+                    os.remove(self.index_path)
+                    self._fsync_dir()
+                os.replace(tmp_path, self.log_path)   # commit point
+                committed = True
+                self._fsync_dir()
+            finally:
+                # a failed swap must not brick the live instance (an
+                # ordinary put can auto-trigger compaction): adopt the new
+                # state only past the commit point, and reopen handles on
+                # whichever log file is current either way
+                if committed:
+                    self._index = new_index
+                    self._log_size = pos
+                    self._dead_bytes = 0
+                self._fh = open(self.log_path, "ab")
+                self._rfh = open(self.log_path, "rb")
+            self.compactions += 1
+            self._write_index_locked()
+            return {"live_bytes": pos, "reclaimed_bytes": reclaimed}
 
     def __contains__(self, key: Key) -> bool:
-        return _key_str(key) in self._index
+        with self._lock:
+            return _key_str(key) in self._index
 
     def keys(self):
+        with self._lock:
+            names = list(self._index)
         out = []
-        for ks in self._index:
+        for ks in names:
             p, d, c = ks.split("/", 2)
             out.append((int(p), int(d), c))
         return out
+
+    def _fsync_dir(self) -> None:
+        fd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def _write_index_locked(self) -> None:
+        tmp = self.index_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"index": {k: list(v) for k, v in self._index.items()},
+                       "log_end": self._log_size}, f)
+        os.replace(tmp, self.index_path)  # atomic
 
     def flush(self) -> None:
         with self._lock:
             self._fh.flush()
             os.fsync(self._fh.fileno())
-            tmp = self.index_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"index": {k: list(v) for k, v in self._index.items()},
-                           "log_end": os.path.getsize(self.log_path)}, f)
-            os.replace(tmp, self.index_path)  # atomic
+            self._write_index_locked()
 
     def close(self) -> None:
+        if self._fh.closed:   # idempotent — managers close owned stores
+            return
         self.flush()
         self._fh.close()
+        self._rfh.close()
+
+
+class TieredKV(KVStore):
+    """Hot in-memory blob cache over a cold backend, byte-budgeted.
+
+    * **Write-through**: ``put`` lands in the cold store first, then
+      (re)admits the new blob into the hot tier — the cold tier is always
+      the full, durable store and ``keys()``/``total_bytes()`` delegate
+      to it.
+    * **Compressed-at-rest**: values are the codec-layer blobs; the hot
+      tier caches them verbatim (decode happens in the prefetcher
+      threads), so the budget holds ``compression_ratio×`` more payloads.
+    * **Versioned admission**: each overwrite/delete bumps a per-key
+      version; a get that read the cold tier concurrently with an
+      overwrite only admits its blob if the version is unchanged,
+      otherwise it retries — after a ``put`` returns, no later ``get``
+      can observe the previous blob.  Writers additionally serialize on
+      one lock so cold-tier write order always matches admission order
+      (racing puts cannot strand the losing blob in the hot tier).
+    * **Accounting**: ``stats`` sees every logical get (each tagged
+      hot-hit or hot-miss); the cold backend's own ``stats`` counts the
+      physical reads the hot tier absorbed.
+    """
+
+    def __init__(self, cold: KVStore, hot_bytes: int = 64 << 20,
+                 max_item_frac: float = 0.25) -> None:
+        super().__init__()
+        self.cold = cold
+        self.hot_bytes = int(hot_bytes)
+        self.max_item_bytes = max(1, int(self.hot_bytes * max_item_frac))
+        self._hot: OrderedDict[Key, bytes] = OrderedDict()
+        self._hot_size = 0
+        # per-key write versions guard admission; entries live only for
+        # keys that exist (bounded by the live set) — a delete reclaims
+        # its entry unless a cold read is in flight, in which case a
+        # tombstone version stays so the reader cannot admit stale bytes
+        self._ver: dict[Key, int] = {}
+        self._inflight: dict[Key, int] = {}
+        self._lock = threading.Lock()
+        # writes hold this across the cold put/delete *and* the version
+        # bump + admission, so cold-tier order == admission order — two
+        # racing puts can never leave the hot tier serving the loser
+        # (cold backends serialize writers internally anyway)
+        self._write_lock = threading.Lock()
+        self.evictions = 0
+
+    # -- hot-tier plumbing (lock held) --------------------------------------
+    def _drop(self, key: Key) -> None:
+        old = self._hot.pop(key, None)
+        if old is not None:
+            self._hot_size -= len(old)
+
+    def _admit(self, key: Key, value: bytes) -> None:
+        self._drop(key)
+        if len(value) > self.max_item_bytes:
+            return
+        self._hot[key] = value
+        self._hot_size += len(value)
+        while self._hot_size > self.hot_bytes and self._hot:
+            _, v = self._hot.popitem(last=False)
+            self._hot_size -= len(v)
+            self.evictions += 1
+
+    def _dec_inflight(self, key: Key) -> None:
+        n = self._inflight.get(key, 0) - 1
+        if n <= 0:
+            self._inflight.pop(key, None)
+        else:
+            self._inflight[key] = n
+
+    # -- KVStore API --------------------------------------------------------
+    def get(self, key: Key) -> bytes:
+        with self._lock:
+            v = self._hot.get(key)
+            if v is not None:
+                self._hot.move_to_end(key)
+        if v is not None:
+            self.stats.add_get(len(v), hot=True)
+            return v
+        while True:
+            with self._lock:
+                ver = self._ver.get(key, 0)
+                self._inflight[key] = self._inflight.get(key, 0) + 1
+            try:
+                v = self.cold.get(key)        # may raise KeyError
+            except BaseException:
+                with self._lock:
+                    self._dec_inflight(key)
+                raise
+            with self._lock:
+                self._dec_inflight(key)
+                if self._ver.get(key, 0) == ver:
+                    self._admit(key, v)
+                    break
+                newer = self._hot.get(key)
+                if newer is not None:         # the racing put admitted it
+                    self._hot.move_to_end(key)
+                    v = newer
+                    break
+            # overwritten mid-read and not admitted (e.g. oversized) — retry
+        self.stats.add_get(len(v), hot=False)
+        return v
+
+    def put(self, key: Key, value: bytes) -> None:
+        value = bytes(value)
+        with self._write_lock:
+            self.cold.put(key, value)
+            with self._lock:
+                self._ver[key] = self._ver.get(key, 0) + 1
+                self._admit(key, value)
+        self.stats.add_put(len(value))
+
+    def delete(self, key: Key) -> None:
+        with self._write_lock:
+            self.cold.delete(key)
+            self._finish_delete(key)
+
+    def _finish_delete(self, key: Key) -> None:
+        with self._lock:
+            if self._inflight.get(key):
+                # a cold read is mid-flight: leave a bumped tombstone
+                # version so it cannot admit the bytes it read
+                self._ver[key] = self._ver.get(key, 0) + 1
+            else:
+                # no reader can hold a pre-delete version — reclaim the
+                # entry so dead keys don't accumulate version state
+                self._ver.pop(key, None)
+            self._drop(key)
+
+    def __contains__(self, key: Key) -> bool:
+        with self._lock:
+            if key in self._hot:
+                return True
+        return key in self.cold
+
+    def keys(self):
+        return self.cold.keys()
+
+    def total_bytes(self) -> int:
+        return self.cold.total_bytes()
+
+    def hot_bytes_used(self) -> int:
+        with self._lock:
+            return self._hot_size
+
+    def resize_hot(self, hot_bytes: int,
+                   max_item_frac: float = 0.25) -> None:
+        """Shrink/grow the hot budget in place (benchmarks set it relative
+        to the store size measured after a build)."""
+        with self._lock:
+            self.hot_bytes = int(hot_bytes)
+            self.max_item_bytes = max(1, int(self.hot_bytes * max_item_frac))
+            while self._hot_size > self.hot_bytes and self._hot:
+                _, v = self._hot.popitem(last=False)
+                self._hot_size -= len(v)
+                self.evictions += 1
+
+    def flush(self) -> None:
+        self.cold.flush()
+
+    def close(self) -> None:
+        self.cold.close()
 
 
 class PartitionedKV(KVStore):
@@ -327,3 +681,49 @@ class PartitionedKV(KVStore):
     def close(self) -> None:
         for p in self.parts:
             p.close()
+
+
+# ---------------------------------------------------------------------------
+# environment-driven store construction
+# ---------------------------------------------------------------------------
+
+_TMPDIRS: list[str] = []
+
+
+def _cleanup_tmpdirs() -> None:  # pragma: no cover - process teardown
+    for d in _TMPDIRS:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+atexit.register(_cleanup_tmpdirs)
+
+
+def make_store(spec: str | None, *, directory: str | None = None,
+               hot_bytes: int = 64 << 20) -> KVStore:
+    """``mem`` | ``logfile`` | ``tiered`` (hot cache over a logfile)."""
+    spec = (spec or "mem").strip().lower()
+    if spec == "mem":
+        return MemKV()
+    if directory is None:
+        directory = tempfile.mkdtemp(prefix="repro-kv-")
+        _TMPDIRS.append(directory)
+    if spec == "logfile":
+        return LogFileKV(directory)
+    if spec == "tiered":
+        return TieredKV(LogFileKV(directory), hot_bytes=hot_bytes)
+    raise ValueError(f"unknown KV spec {spec!r} (mem | logfile | tiered)")
+
+
+def store_from_env() -> KVStore | None:
+    """Build the default store from ``REPRO_KV`` (None when unset/``mem``
+    — the caller falls back to a plain :class:`MemKV`).  Each call makes
+    an independent store; disk-backed ones live in fresh temp dirs under
+    ``REPRO_KV_DIR`` (or the system tmp), removed at process exit."""
+    spec = os.environ.get("REPRO_KV", "").strip().lower()
+    if spec in ("", "mem"):
+        return None
+    base = os.environ.get("REPRO_KV_DIR") or None
+    directory = tempfile.mkdtemp(prefix="repro-kv-", dir=base)
+    _TMPDIRS.append(directory)
+    hot = int(float(os.environ.get("REPRO_KV_HOT_MB", "64")) * 2**20)
+    return make_store(spec, directory=directory, hot_bytes=hot)

@@ -57,3 +57,17 @@ def test_whole_history_query():
     present_all = ai.query_whole_history("deg1")
     per_leaf = all("deg1" in s for s in ai._leaf_snaps)
     assert present_all == per_leaf
+
+
+def test_aux_snapshots_persist_through_codec():
+    """Aux leaf snapshots ride the codec-compressed blob path: save into
+    the graph's own KV store, reload, and serve identical snapshots."""
+    from repro.core.auxiliary import AuxHistoryIndex
+
+    uni, ev, gm = setup()
+    ai = AuxHistoryIndex(DegreeHistogramIndex(), gm.dg, ev)
+    nbytes = ai.save()
+    assert nbytes > 0
+    assert (0, AuxHistoryIndex._AUX_PID, "aux.deghist") in gm.dg.store
+    snaps = AuxHistoryIndex.load_snaps(gm.dg.store, "deghist")
+    assert snaps == ai._leaf_snaps

@@ -125,3 +125,198 @@ def test_param_delta_history(tmp_path):
     hist = restore_param_history(store, [0, 1, 2], like=t0)
     assert hist[1]["w"][3] == 99.0 and hist[1]["w"][7] == 7.0
     assert hist[2]["w"][7] == -1.0
+
+
+# ---------------------------------------------------------------------------
+# LogFileKV compaction
+# ---------------------------------------------------------------------------
+
+def _fill(kv, n=20, size=200):
+    for i in range(n):
+        kv.put((0, i, "c"), bytes([i % 251]) * size)
+
+
+def test_logfile_compact_reclaims_dead_bytes(tmp_path):
+    kv = LogFileKV(str(tmp_path / "kv"), auto_compact=False)
+    _fill(kv)
+    for i in range(10):                      # overwrite half
+        kv.put((0, i, "c"), b"new-%d" % i)
+    for i in range(15, 20):                  # delete a few
+        kv.delete((0, i, "c"))
+    assert kv.dead_bytes > 0
+    size_before = os.path.getsize(kv.log_path)
+    res = kv.compact()
+    assert res["reclaimed_bytes"] > 0
+    assert os.path.getsize(kv.log_path) < size_before
+    assert kv.dead_bytes == 0 and kv.compactions == 1
+    for i in range(10):
+        assert kv.get((0, i, "c")) == b"new-%d" % i
+    for i in range(10, 15):
+        assert kv.get((0, i, "c")) == bytes([i % 251]) * 200
+    for i in range(15, 20):
+        assert (0, i, "c") not in kv
+    kv.close()
+    # reopens cleanly from the compacted log + rewritten index
+    kv2 = LogFileKV(str(tmp_path / "kv"))
+    assert kv2.get((0, 3, "c")) == b"new-3"
+    kv2.close()
+
+
+def test_logfile_auto_compact_triggers(tmp_path):
+    kv = LogFileKV(str(tmp_path / "kv"), compact_min_bytes=2_000,
+                   compact_ratio=0.4)
+    for round_ in range(30):
+        for i in range(8):
+            kv.put((0, i, "c"), bytes([round_]) * 120)
+    assert kv.compactions > 0
+    assert kv.dead_ratio() < 0.5
+    for i in range(8):
+        assert kv.get((0, i, "c")) == bytes([29]) * 120
+    kv.close()
+
+
+def test_logfile_compact_crash_before_log_swap(tmp_path, monkeypatch):
+    """Killed after rewriting the live set but before the os.replace
+    commit point: the old log + index are untouched and the stray
+    ``.compact`` file is discarded on reopen."""
+    path = str(tmp_path / "kv")
+    kv = LogFileKV(path, auto_compact=False)
+    _fill(kv)
+    for i in range(10):
+        kv.put((0, i, "c"), b"v2-%d" % i)
+    kv.flush()
+
+    real_replace = os.replace
+
+    def crash_on_log_swap(src, dst):
+        if src.endswith(".compact"):
+            raise RuntimeError("simulated crash before log swap")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", crash_on_log_swap)
+    with pytest.raises(RuntimeError):
+        kv.compact()
+    monkeypatch.undo()
+    assert os.path.exists(kv.log_path + ".compact")  # the orphaned rewrite
+    kv2 = LogFileKV(path)                            # "reboot"
+    assert not os.path.exists(kv2.log_path + ".compact")
+    for i in range(10):
+        assert kv2.get((0, i, "c")) == b"v2-%d" % i
+    for i in range(10, 20):
+        assert kv2.get((0, i, "c")) == bytes([i % 251]) * 200
+    kv2.close()
+
+
+def test_logfile_compact_crash_before_index_rewrite(tmp_path):
+    """Killed after the log swap but before the fresh index write: the
+    old index was invalidated *before* the commit point, so recovery
+    full-scans the compacted log — exact even when the crash hit with
+    unflushed puts and deletes outstanding (the stale-index scenario
+    that would otherwise read wrong bytes at old offsets)."""
+    path = str(tmp_path / "kv")
+    kv = LogFileKV(path, auto_compact=False)
+    _fill(kv, n=4)
+    kv.flush()                      # index snapshot of the *early* log
+    _fill(kv)                       # lots of unflushed churn afterwards
+    for i in range(12):
+        kv.put((0, i, "c"), b"live-%d" % i)
+    kv.delete((0, 18, "c"))
+    kv.delete((0, 19, "c"))
+
+    def crash(*a, **k):
+        raise RuntimeError("simulated crash before index rewrite")
+
+    kv._write_index_locked = crash              # instance-level hook
+    with pytest.raises(RuntimeError):
+        kv.compact()
+    assert not os.path.exists(kv.index_path)    # invalidated pre-commit
+    kv2 = LogFileKV(path)
+    for i in range(12):
+        assert kv2.get((0, i, "c")) == b"live-%d" % i
+    for i in range(12, 18):
+        assert kv2.get((0, i, "c")) == bytes([i % 251]) * 200
+    for i in (18, 19):
+        assert (0, i, "c") not in kv2           # deletes do not resurrect
+    kv2.close()
+
+
+def test_logfile_delete_tombstones_survive_index_loss(tmp_path):
+    """A full-scan rebuild (index lost) must not resurrect deleted keys:
+    deletes append tombstone records to the log."""
+    path = str(tmp_path / "kv")
+    kv = LogFileKV(path, auto_compact=False)
+    _fill(kv, n=6)
+    kv.delete((0, 2, "c"))
+    kv.delete((0, 4, "c"))
+    kv._fh.flush()
+    kv._fh.close()                  # crash: index.json never written
+    os.path.exists(kv.index_path) and os.remove(kv.index_path)
+    kv2 = LogFileKV(path)
+    assert (0, 2, "c") not in kv2 and (0, 4, "c") not in kv2
+    for i in (0, 1, 3, 5):
+        assert kv2.get((0, i, "c")) == bytes([i % 251]) * 200
+    kv2.close()
+
+
+# ---------------------------------------------------------------------------
+# TieredKV
+# ---------------------------------------------------------------------------
+
+def test_tiered_kv_basic(tmp_path):
+    from repro.storage.kv import TieredKV
+    cold = MemKV()
+    kv = TieredKV(cold, hot_bytes=1000, max_item_frac=1.0)
+    kv.put((0, 1, "a"), b"x" * 400)
+    kv.put((0, 2, "b"), b"y" * 400)
+    assert kv.get((0, 1, "a")) == b"x" * 400       # hot hit
+    assert kv.stats.hot_hits == 1 and kv.stats.hot_misses == 0
+    kv.put((0, 3, "c"), b"z" * 400)                 # evicts LRU (key 2)
+    assert kv.evictions >= 1
+    assert kv.hot_bytes_used() <= 1000
+    assert kv.get((0, 2, "b")) == b"y" * 400       # cold miss, re-admitted
+    assert kv.stats.hot_misses == 1
+    assert kv.stats.gets == kv.stats.hot_hits + kv.stats.hot_misses
+    # overwrite is visible immediately, never the stale blob
+    kv.put((0, 1, "a"), b"new")
+    assert kv.get((0, 1, "a")) == b"new"
+    kv.delete((0, 1, "a"))
+    assert (0, 1, "a") not in kv
+    with pytest.raises(KeyError):
+        kv.get((0, 1, "a"))
+    assert set(kv.keys()) == {(0, 2, "b"), (0, 3, "c")}
+    assert kv.total_bytes() == cold.total_bytes()
+
+
+def test_tiered_kv_oversized_items_bypass_hot(tmp_path):
+    from repro.storage.kv import TieredKV
+    kv = TieredKV(MemKV(), hot_bytes=1000, max_item_frac=0.25)
+    kv.put((0, 1, "big"), b"B" * 900)               # > 250 B cap: not admitted
+    assert kv.hot_bytes_used() == 0
+    assert kv.get((0, 1, "big")) == b"B" * 900      # served from cold
+    assert kv.stats.hot_misses == 1
+
+
+def test_tiered_kv_over_logfile_persists(tmp_path):
+    from repro.storage.kv import TieredKV
+    d = str(tmp_path / "cold")
+    kv = TieredKV(LogFileKV(d), hot_bytes=1 << 20)
+    kv.put((0, 1, "a"), b"payload-1")
+    kv.put((1, 2, "b"), b"payload-2")
+    kv.flush()
+    kv.close()
+    kv2 = TieredKV(LogFileKV(d), hot_bytes=1 << 20)
+    assert kv2.get((0, 1, "a")) == b"payload-1"     # cold miss from disk
+    assert kv2.stats.hot_misses == 1
+    assert kv2.get((0, 1, "a")) == b"payload-1"     # now hot
+    assert kv2.stats.hot_hits == 1
+    kv2.close()
+
+
+def test_tiered_kv_resize_hot(tmp_path):
+    from repro.storage.kv import TieredKV
+    kv = TieredKV(MemKV(), hot_bytes=1 << 20, max_item_frac=1.0)
+    for i in range(10):
+        kv.put((0, i, "c"), bytes(100))
+    assert kv.hot_bytes_used() == 1000
+    kv.resize_hot(350)
+    assert kv.hot_bytes_used() <= 350
