@@ -17,14 +17,16 @@ def main() -> None:
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
 
-    from . import (materialize_bench, paper_figs, retrieval_bench,
-                   roofline_report, storage_bench, temporal_bench)
+    from . import (materialize_bench, paper_figs, query_bench,
+                   retrieval_bench, roofline_report, storage_bench,
+                   temporal_bench)
 
     benches = [
         materialize_bench.bench_materialize,
         retrieval_bench.bench_retrieval,
         temporal_bench.bench_temporal,
         storage_bench.bench_storage,
+        query_bench.bench_query,
         paper_figs.fig6_vs_copylog,
         paper_figs.fig7_vs_interval_tree,
         paper_figs.fig8a_graphpool_memory,

@@ -1,9 +1,12 @@
-"""Quickstart: build a historical graph, index it, query snapshots.
+"""Quickstart: build a historical graph, index it, query snapshots — via
+the declarative GraphQuery builder (`Q`), the wire-protocol form of every
+query, and the legacy method surface it shims.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.api import Q
 from repro.core import GraphManager, TimeExpression
 from repro.core.events import GraphHistoryBuilder
 
@@ -24,26 +27,40 @@ universe, events = b.finalize()
 gm = GraphManager(universe, events, L=4, k=2, diff_fn="balanced")
 
 # -- 3. singlepoint retrieval (the paper's GetHistGraph) -------------------
+# the legacy method surface still works; it is a thin shim over the
+# declarative query service (gm.query), used directly in step 4
 h1966 = gm.get_hist_graph(1966, "+node:papers")
 print("1966 nodes:", sorted(h1966.get_nodes()))
 print("1966 grace neighbors:", h1966.get_neighbors("grace"))
 print("1966 grace.papers =", h1966.node_attr("grace", "papers"))
 
-# -- 4. multipoint retrieval (one Steiner-tree plan) -----------------------
+# -- 4. declarative queries: build a document, run it, read the stats ------
+doc = Q.at(1966).attrs("+node:papers").build()
+print("as a wire document:", doc.to_json())
+res = gm.query.run(doc)
+print(f"same snapshot via the document: {res.value.node_mask.sum()} nodes, "
+      f"stats={ {k: res.stats[k] for k in ('kv_gets', 'cache_hits')} }")
+
+# -- 5. multipoint retrieval (one Steiner-tree plan) -----------------------
 for h in gm.get_hist_graphs([1963, 1969, 1973]):
     print(f"{h.time}: {h.num_nodes()} nodes / {h.num_edges()} edges")
+# ... or declaratively; co-batched documents merge into ONE plan
+results = gm.query.run_batch([Q.at(1963).build(), Q.at(1969, 1973).build()])
+print("multipoint merged", results[0].stats["merged_docs"],
+      "documents into one plan")
 
-# -- 5. TimeExpression: edges valid in 1969 but not 1973 -------------------
+# -- 6. TimeExpression: edges valid in 1969 but not 1973 -------------------
 tex = TimeExpression.parse("t0 & ~t1", [1969, 1973])
-st = gm.get_hist_graph_expr(tex)
-print("edges in 1969 but gone by 1973:", int(st.edge_mask.sum()))
+with gm.get_hist_graph_expr(tex) as g:     # HistGraph: a context manager
+    print("edges in 1969 but gone by 1973:", g.num_edges())
+# equivalent document: Q.expr("t0 & ~t1", [1969, 1973]).build()
 
-# -- 6. interval query picks up the transient ------------------------------
-res = gm.get_hist_graph_interval(1970, 1973)
+# -- 7. interval query picks up the transient ------------------------------
+res = gm.get_hist_graph_interval(1970, 1973)   # = Q.between(1970, 1973)
 print("elements added in [1970, 1973):",
       {k: v.tolist() for k, v in res.items() if len(v)})
 
-# -- 7. live updates keep the index fresh (§6) -----------------------------
+# -- 8. live updates keep the index fresh (§6) -----------------------------
 upd = GraphHistoryBuilder()
 upd.universe = universe          # same id space, new events
 upd._seq = 10_000

@@ -1,14 +1,18 @@
-"""Snapshot server: serve batched historical-snapshot queries with the
-multipoint (Steiner) planner + GraphPool overlay — the paper's primary
-workload, with p50/p99 latency reporting and straggler-aware fetch.
+"""Snapshot server: serve batched historical-snapshot queries arriving as
+declarative GraphQuery documents (the wire protocol) — co-batched
+documents merge into one multipoint (Steiner) plan, results land in the
+GraphPool overlay, with p50/p99 latency reporting and straggler-aware
+fetch.  The same loop `serve.py --mode query` runs over stdin.
 
 Run:  PYTHONPATH=src python examples/snapshot_server.py [--requests 200]
 """
 import argparse
+import json
 import time
 
 import numpy as np
 
+from repro.api import GraphQuery
 from repro.core import GraphManager
 from repro.core.query import NO_ATTRS
 from repro.data.generators import churn_network
@@ -39,26 +43,32 @@ def main():
               f"{advice.expected_saved_bytes:.0f}")
     tmax = int(ev.time[-1])
     rng = np.random.default_rng(0)
+    svc = gm.query
 
-    # simulated request stream: recency-biased query times (g(t) §5.1)
+    # simulated request stream: each client sends one snapshot *document*
+    # (recency-biased query times, g(t) §5.1); concurrent documents are
+    # co-batched by the service into ONE merged Steiner plan per group
     lat = []
-    served = 0
+    served = kv_gets = 0
     t_start = time.time()
     while served < args.requests:
-        batch_t = [int(tmax * (1 - rng.beta(1, 4))) for _ in range(args.batch)]
+        wire = [json.dumps({"kind": "snapshot",
+                            "t": int(tmax * (1 - rng.beta(1, 4)))})
+                for _ in range(args.batch)]
         t0 = time.perf_counter()
-        states = gm.dg.get_snapshots(batch_t, NO_ATTRS, pool=gm.pool)
-        gids = [gm.pool.insert_snapshot(st) for st in states.values()]
-        lat.append((time.perf_counter() - t0) / len(batch_t))
+        results = svc.run_batch([GraphQuery.from_json(s) for s in wire])
+        gids = [gm.pool.insert_snapshot(r.value) for r in results]
+        lat.append((time.perf_counter() - t0) / len(wire))
+        kv_gets += results[0].stats["kv_gets"]
         for g in gids:   # client done → release + lazy clean
             gm.pool.release(g)
         gm.pool.cleaner()
-        served += len(batch_t)
+        served += len(wire)
     wall = time.time() - t_start
 
     lat_ms = np.asarray(lat) * 1000
-    print(f"served {served} snapshot queries in {wall:.2f}s "
-          f"({served/wall:.0f} qps)")
+    print(f"served {served} snapshot documents in {wall:.2f}s "
+          f"({served/wall:.0f} qps, {kv_gets} KV gets)")
     print(f"per-query latency: p50={np.percentile(lat_ms,50):.2f}ms "
           f"p95={np.percentile(lat_ms,95):.2f}ms "
           f"p99={np.percentile(lat_ms,99):.2f}ms")

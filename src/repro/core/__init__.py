@@ -12,6 +12,9 @@ Public surface:
   queries over snapshot intervals (``GraphManager.evolve``)
 """
 from .deltagraph import DeltaGraph  # noqa: F401
+from .errors import (AttrOptionsError, DocumentError, ExecutionError,  # noqa: F401
+                     QueryError, TimeExpressionError, UnknownAttributeError,
+                     UnknownOperatorError)
 from .events import (EventList, GraphHistoryBuilder, GraphUniverse,  # noqa: F401
                      MaterializedState, apply_events, replay)
 from .graphpool import GraphPool  # noqa: F401

@@ -20,10 +20,10 @@ from ..storage.kv import KVStore, MemKV, store_from_env
 from .analysis import estimate_rates
 from .deltagraph import DeltaGraph
 from .events import EventList, GraphUniverse, MaterializedState, replay
-from .graphpool import CURRENT_GID, GraphPool
+from .graphpool import GraphPool
 from .materialize import (Advice, AdvisorConfig, MaterializationAdvisor,
                           SnapshotCache, WorkloadStats)
-from .query import NO_ATTRS, AttrOptions, TimeExpression, parse_attr_options
+from .query import AttrOptions, TimeExpression, parse_attr_options
 
 
 class HistGraph:
@@ -101,8 +101,19 @@ class HistGraph:
 
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
+        """Release this graph's GraphPool bits (idempotent); the pool
+        cleaner reclaims the plane rows lazily."""
+        if getattr(self, "_closed", False):
+            return
+        self._closed = True
         self._mgr.pool.release(self.gid)
         self._mgr.pool.cleaner()
+
+    def __enter__(self) -> "HistGraph":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class GraphManager:
@@ -147,6 +158,7 @@ class GraphManager:
         else:
             self.prefetcher = None
         self._temporal = None
+        self._query_service = None
         # concurrent retrievals are supported (cache and workload counters
         # are internally locked); advisor *replans* mutate the pool and the
         # skeleton's materialization marks, so they are serialized here —
@@ -171,32 +183,36 @@ class GraphManager:
         self.close()
 
     # ------------------------------------------------------------- retrieval
+    #
+    # Every retrieval/analytics entry point below is a thin shim over the
+    # declarative query service (repro/api): it builds the equivalent
+    # GraphQuery document and runs it through ``self.query``.  The service
+    # owns the single implementation of cached + advised + batched
+    # retrieval, so the legacy surface and the wire protocol are
+    # bit-identical by construction (tests/test_query_service.py).
     def _parse_opts(self, attr_options: str | AttrOptions) -> AttrOptions:
         return (attr_options if isinstance(attr_options, AttrOptions)
                 else parse_attr_options(attr_options, self.universe))
+
+    @property
+    def query(self):
+        """The :class:`~repro.api.service.QueryService` bound to this
+        manager — the declarative entry point (``gm.query.run(doc)``)."""
+        if self._query_service is None:
+            from ..api.service import QueryService
+            self._query_service = QueryService(self)
+        return self._query_service
 
     def get_snapshot(self, t: int, attr_options: str | AttrOptions = "",
                      use_current: bool = True) -> MaterializedState:
         """Singlepoint retrieval through the snapshot cache (exact-timepoint
         LRU) with the advisor's online replan hook.  Results are always
-        bit-identical to a cold ``DeltaGraph.get_snapshot``."""
-        opts = self._parse_opts(attr_options)
-        key = (SnapshotCache.key(t, opts, use_current)
-               if self.cache is not None else None)
-        if self.cache is not None:
-            hit = self.cache.get(key)
-            if hit is not None:
-                self.workload.record_cache_hit()
-                return hit
-        plan = self.dg.plan_singlepoint(t, opts, use_current)
-        st = self.dg.execute(plan, opts, pool=self.pool)[t]
-        if self.cache is not None:
-            self.cache.put(key, st, deps=plan.source_nids())
-        if self.advisor is not None:
-            with self._advisor_lock:
-                if self.advisor is not None:
-                    self.advisor.on_query()
-        return st
+        bit-identical to a cold ``DeltaGraph.get_snapshot``.
+        ≡ ``Q.at(t).attrs(...).build()``."""
+        from ..api.document import GraphQuery
+        doc = GraphQuery(kind="snapshot", t=int(t), attrs=attr_options,
+                         use_current=bool(use_current))
+        return self.query.run(doc).value
 
     def get_snapshots(self, times: Sequence[int],
                       attr_options: str | AttrOptions = "",
@@ -204,74 +220,59 @@ class GraphManager:
                       ) -> dict[int, MaterializedState]:
         """Batched multipoint retrieval (§4.4): cache hits are split off,
         the misses become **one** Steiner plan whose shared prefixes fetch
-        and apply once, executed with async KV prefetch."""
-        opts = self._parse_opts(attr_options)
-        times = [int(t) for t in dict.fromkeys(int(t) for t in times)]
-        out: dict[int, MaterializedState] = {}
-        misses: list[int] = []
-        for t in times:
-            if self.cache is not None:
-                hit = self.cache.get(SnapshotCache.key(t, opts, use_current))
-                if hit is not None:
-                    self.workload.record_cache_hit()
-                    out[t] = hit
-                    continue
-            misses.append(t)
-        if misses:
-            plan = self.dg.plan_multipoint(misses, opts, use_current)
-            states = self.dg.execute(plan, opts, pool=self.pool,
-                                     prefetch=self.prefetcher)
-            # per-target deps: only the pins on a target's own branch
-            # invalidate its entry, not every pin the batch touched
-            deps = plan.per_target_source_nids()
-            for t in misses:
-                out[t] = states[t]
-                if self.cache is not None:
-                    self.cache.put(SnapshotCache.key(t, opts, use_current),
-                                   states[t], deps=deps.get(t))
-            if self.advisor is not None:
-                with self._advisor_lock:
-                    if self.advisor is not None:
-                        self.advisor.on_query(n=len(misses))
-        return out
+        and apply once, executed with async KV prefetch.
+        ≡ ``Q.at(times).attrs(...).build()``."""
+        from ..api.document import GraphQuery
+        times = tuple(int(t) for t in times)
+        if not times:     # wire documents reject this; the legacy
+            return {}     # contract is an empty result
+        doc = GraphQuery(kind="multipoint", times=times,
+                         attrs=attr_options, use_current=bool(use_current))
+        return self.query.run(doc).value
 
     def get_hist_graph(self, t: int, attr_options: str = "",
                        use_current: bool = True) -> HistGraph:
-        opts = parse_attr_options(attr_options, self.universe)
+        opts = self._parse_opts(attr_options)
         st = self.get_snapshot(t, opts, use_current=use_current)
         gid = self.pool.insert_snapshot(st)
         return HistGraph(self, gid, t, opts)
 
     def get_hist_graphs(self, times: Sequence[int],
-                        attr_options: str = "") -> list[HistGraph]:
-        """Batched retrieval + one batched GraphPool overlay pass."""
-        opts = parse_attr_options(attr_options, self.universe)
-        states = self.get_snapshots(list(times), opts)
+                        attr_options: str = "",
+                        use_current: bool = True) -> list[HistGraph]:
+        """Batched retrieval + one batched GraphPool overlay pass.
+        ``use_current`` is threaded through to the planner, same as the
+        singlepoint entry."""
+        opts = self._parse_opts(attr_options)
+        states = self.get_snapshots(list(times), opts,
+                                    use_current=use_current)
         gids = self.pool.insert_snapshots([states[int(t)] for t in times])
         return [HistGraph(self, gid, int(t), opts)
                 for gid, t in zip(gids, times)]
 
     def get_hist_graph_expr(self, tex: TimeExpression,
-                            attr_options: str = "") -> MaterializedState:
+                            attr_options: str = "") -> HistGraph:
         """Hypothetical graph for a Boolean TimeExpression (§3.2.1): the
         element set satisfying the expression; attributes come from the
-        latest queried time point at which the element exists."""
-        opts = parse_attr_options(attr_options, self.universe)
-        states = self.get_snapshots(list(tex.times), opts)
-        ordered = [states[t] for t in tex.times]
-        nmask = tex.evaluate([s.node_mask for s in ordered])
-        emask = tex.evaluate([s.edge_mask for s in ordered])
-        na = np.full_like(ordered[0].node_attrs, np.nan)
-        ea = np.full_like(ordered[0].edge_attrs, np.nan)
-        for s in ordered:  # later time points override
-            take = s.node_mask & nmask
-            na[take] = s.node_attrs[take]
-            take_e = s.edge_mask & emask
-            ea[take_e] = s.edge_attrs[take_e]
-        return MaterializedState(nmask, emask, na, ea)
+        latest queried time point at which the element exists.  Returns a
+        GraphPool-overlaid :class:`HistGraph` (like every other
+        ``get_hist_graph*`` entry); use :meth:`HistGraph.to_state` for
+        the raw :class:`MaterializedState`.
+        ≡ ``Q.expr(tex.to_infix(), tex.times).build()``."""
+        from ..api.document import GraphQuery
+        opts = self._parse_opts(attr_options)
+        doc = GraphQuery(kind="expr", expr=tex.to_infix(),
+                         times=tuple(int(t) for t in tex.times),
+                         attrs=opts)
+        st = self.query.run(doc).value
+        gid = self.pool.insert_snapshot(st)
+        return HistGraph(self, gid, None, opts)
 
     def get_hist_graph_interval(self, ts: int, te: int) -> dict[str, np.ndarray]:
-        return self.dg.get_interval(ts, te)
+        """≡ ``Q.between(ts, te).build()``."""
+        from ..api.document import GraphQuery
+        doc = GraphQuery(kind="interval", ts=int(ts), te=int(te))
+        return self.query.run(doc).value
 
     # ------------------------------------------------------ temporal analytics
     def evolve(self, times: "Sequence[int] | TimeExpression",
@@ -292,13 +293,18 @@ class GraphManager:
         :class:`~repro.core.temporal.PregelFold`), or a plain fold
         callable ``f(prev_value, state, delta, t)``.
         ``incremental=False`` runs the per-snapshot recompute baseline.
-        Returns an :class:`~repro.core.temporal.EvolveResult`."""
-        if self._temporal is None:
-            from .temporal import TemporalEngine
-            self._temporal = TemporalEngine(self)
-        return self._temporal.evolve(times, op, attr_options=attr_options,
-                                     use_current=use_current,
-                                     incremental=incremental, **op_kwargs)
+        Returns an :class:`~repro.core.temporal.EvolveResult`.
+        ≡ ``Q.evolve(times, op, **kwargs).build()`` (named operators
+        serialize; EvolveOp instances/callables are programmatic-only)."""
+        from ..api.document import GraphQuery
+        if isinstance(times, TimeExpression):
+            times = list(times.times)
+        doc = GraphQuery(kind="evolve",
+                         times=tuple(int(t) for t in times),
+                         op=op, op_kwargs=dict(op_kwargs),
+                         attrs=attr_options, use_current=bool(use_current),
+                         incremental=bool(incremental))
+        return self.query.run(doc).value
 
     # ------------------------------------------------------------- updates
     def update(self, ev: EventList) -> None:

@@ -176,6 +176,15 @@ class PlanIR:
         return [n.key for n in self.nodes
                 if isinstance(n.op, STATE_OPS) and not isinstance(n.op, Fork)]
 
+    def cost_summary(self) -> dict:
+        """Planner-side execution stats for the :class:`QueryResult`
+        envelope: total decode-aware cost, distinct payload fetches, and
+        state-producing step count."""
+        return {"plan_cost": float(self.total_weight),
+                "payload_fetches": int(self.payload_fetches),
+                "plan_steps": len(self.steps),
+                "targets": len(self.targets)}
+
 
 # ---------------------------------------------------------------------------
 # builder

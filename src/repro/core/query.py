@@ -17,6 +17,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .errors import (AttrOptionsError, TimeExpressionError,
+                     UnknownAttributeError)
 from .events import GraphUniverse
 
 _OPT_RE = re.compile(r"([+-])(node|edge):([A-Za-z0-9_.]+|all)")
@@ -53,6 +55,12 @@ def parse_attr_options(spec: str, universe: GraphUniverse) -> AttrOptions:
 
     Later sub-options override earlier ones for a specific attribute, and
     specific attributes override ``all`` (Table 1).
+
+    Errors are typed (:mod:`repro.core.errors`): syntax problems raise
+    :class:`AttrOptionsError` and unknown attribute names raise
+    :class:`UnknownAttributeError`, both carrying the character position —
+    and both still catchable as the pre-taxonomy ``ValueError`` /
+    ``KeyError``.
     """
     node_sel: dict[int, bool] = {}
     edge_sel: dict[int, bool] = {}
@@ -61,7 +69,8 @@ def parse_attr_options(spec: str, universe: GraphUniverse) -> AttrOptions:
     pos = 0
     for m in _OPT_RE.finditer(spec or ""):
         if m.start() != pos:
-            raise ValueError(f"bad attr_options near {spec[pos:]!r}")
+            raise AttrOptionsError(f"bad attr_options near {spec[pos:]!r}",
+                                   position=pos)
         pos = m.end()
         sign, kind, name = m.group(1) == "+", m.group(2), m.group(3)
         table = (universe.node_attr_cols if kind == "node"
@@ -75,10 +84,13 @@ def parse_attr_options(spec: str, universe: GraphUniverse) -> AttrOptions:
             sel.clear()  # `all` resets prior per-attribute overrides
         else:
             if name not in table:
-                raise KeyError(f"unknown {kind} attribute {name!r}")
+                raise UnknownAttributeError(
+                    f"unknown {kind} attribute {name!r}",
+                    position=m.start(3))
             sel[table[name]] = sign
     if pos != len(spec or ""):
-        raise ValueError(f"bad attr_options near {spec[pos:]!r}")
+        raise AttrOptionsError(f"bad attr_options near {spec[pos:]!r}",
+                               position=pos)
 
     def resolve(all_flag: bool, sel: dict[int, bool], n: int) -> tuple[int, ...]:
         cols = set(range(n)) if all_flag else set()
@@ -141,9 +153,24 @@ class TimeExpression:
 
     @staticmethod
     def parse(text: str, times: Sequence[int]) -> "TimeExpression":
-        tokens = re.findall(r"t\d+|[()&|~]", text.replace(" ", ""))
-        if "".join(tokens) != text.replace(" ", ""):
-            raise ValueError(f"bad TimeExpression {text!r}")
+        """Parse infix syntax.  Errors raise
+        :class:`~repro.core.errors.TimeExpressionError` (a ``ValueError``
+        subclass) carrying the character position in the de-spaced input.
+        """
+        src = text.replace(" ", "")
+        tokens: list[str] = []
+        spans: list[int] = []          # start offset of each token in src
+        scan = 0
+        for m in re.finditer(r"t\d+|[()&|~]", src):
+            if m.start() != scan:
+                raise TimeExpressionError(
+                    f"bad TimeExpression {text!r}", position=scan)
+            tokens.append(m.group(0))
+            spans.append(m.start())
+            scan = m.end()
+        if scan != len(src):
+            raise TimeExpressionError(f"bad TimeExpression {text!r}",
+                                      position=scan)
         pos = 0
 
         def peek():
@@ -152,11 +179,14 @@ class TimeExpression:
         def eat(tok=None):
             nonlocal pos
             if pos >= len(tokens):  # truncated input, e.g. "(t0"
-                raise ValueError(f"unexpected end of TimeExpression {text!r}"
-                                 + (f" (expected {tok})" if tok else ""))
+                raise TimeExpressionError(
+                    f"unexpected end of TimeExpression {text!r}"
+                    + (f" (expected {tok})" if tok else ""),
+                    position=len(src))
             t = tokens[pos]
             if tok and t != tok:
-                raise ValueError(f"expected {tok} got {t}")
+                raise TimeExpressionError(f"expected {tok} got {t}",
+                                          position=spans[pos])
             pos += 1
             return t
 
@@ -171,12 +201,16 @@ class TimeExpression:
                 eat("~")
                 return ("not", atom())
             if t and t.startswith("t"):
+                at = spans[pos]
                 eat()
                 i = int(t[1:])
                 if i >= len(times):
-                    raise ValueError(f"time index {t} out of range")
+                    raise TimeExpressionError(f"time index {t} out of range",
+                                              position=at)
                 return ("t", i)
-            raise ValueError(f"unexpected token {t!r}")
+            raise TimeExpressionError(
+                f"unexpected token {t!r}",
+                position=spans[pos] if pos < len(tokens) else len(src))
 
         def conj():
             e = atom()
@@ -194,5 +228,6 @@ class TimeExpression:
 
         tree = expr()
         if pos != len(tokens):
-            raise ValueError(f"trailing tokens in {text!r}")
+            raise TimeExpressionError(f"trailing tokens in {text!r}",
+                                      position=spans[pos])
         return TimeExpression(times, tree)

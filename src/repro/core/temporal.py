@@ -427,11 +427,11 @@ _OPS: dict[str, Callable[..., EvolveOp]] = {
 
 def resolve_op(op: str | EvolveOp | Callable, kwargs: dict) -> EvolveOp:
     if isinstance(op, str):
-        try:
-            return _OPS[op](**kwargs)
-        except KeyError:
-            raise ValueError(f"unknown evolve op {op!r}; "
-                             f"choose from {sorted(_OPS)}") from None
+        if op not in _OPS:
+            from .errors import UnknownOperatorError
+            raise UnknownOperatorError(f"unknown evolve op {op!r}; "
+                                       f"choose from {sorted(_OPS)}")
+        return _OPS[op](**kwargs)
     # an instance or callable carries its own configuration — keyword
     # arguments would be silently dead, so reject them loudly
     if kwargs:

@@ -1,5 +1,10 @@
 """Serving launchers.
 
+* ``--mode query`` — the declarative wire protocol: newline-delimited
+  JSON :class:`~repro.api.document.GraphQuery` documents in (stdin or
+  ``--input``), JSON :class:`~repro.api.service.QueryResult` envelopes
+  out, with co-batched documents merged into one Steiner plan
+  (``--doc-batch``) — the request-serving front end;
 * ``--mode snapshots`` — historical-snapshot traffic against a
   GraphManager with the workload-aware materialization advisor + snapshot
   cache enabled (the paper's retrieval service, core/materialize.py);
@@ -14,7 +19,9 @@
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+from typing import Iterable, Iterator
 
 import numpy as np
 
@@ -126,6 +133,100 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
         s.close()
 
 
+def run_query_documents(gm, lines: Iterable[str],
+                        batch: int = 8) -> Iterator[str]:
+    """The wire loop: parse each NDJSON line into a GraphQuery, execute
+    groups of up to ``batch`` documents through ``QueryService.run_batch``
+    (co-plannable documents share one merged Steiner plan), and yield one
+    JSON envelope per input line, in input order.  A malformed line
+    yields an error envelope; it never poisons its batch."""
+    from ..api.document import GraphQuery
+    from ..api.service import QueryService
+
+    svc = gm.query
+
+    def flush(chunk: list[tuple[int, object]]) -> list[str]:
+        # chunk rows are (slot, GraphQuery) or (slot, ready envelope str)
+        docs = [(i, d) for i, d in chunk if isinstance(d, GraphQuery)]
+        out: dict[int, str] = {i: d for i, d in chunk
+                               if not isinstance(d, GraphQuery)}
+        results = svc.run_batch([d for _, d in docs], on_error="envelope")
+        for (i, _), res in zip(docs, results):
+            out[i] = res.to_json()
+        return [out[i] for i, _ in chunk]
+
+    chunk: list[tuple[int, object]] = []
+    slot = 0
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            item: object = GraphQuery.from_json(line)
+        except Exception as e:
+            item = QueryService._error_result(None, e).to_json()
+        chunk.append((slot, item))
+        slot += 1
+        if len(chunk) >= batch:
+            yield from flush(chunk)
+            chunk = []
+    if chunk:
+        yield from flush(chunk)
+
+
+def serve_query(n_events: int, batch: int, input_path: str | None,
+                seed: int = 0, codec: str = "v2", kv: str = "mem",
+                kv_dir: str | None = None, hot_mb: float = 8.0,
+                budget_mb: float = 0.0) -> None:
+    """Real request serving: NDJSON GraphQuery documents in, JSON
+    QueryResult envelopes out (stdout stays pure NDJSON; the summary goes
+    to stderr).  ``--advisor-mb > 0`` also enables the materialization
+    advisor under that GraphPool budget."""
+    import os as _os
+
+    from ..core import GraphManager
+    from ..data.generators import churn_network
+    from ..storage import codec as codec_mod
+    from ..storage.kv import make_store
+
+    codec_mod.set_default_codec(codec)
+    uni, ev = churn_network(n_initial_edges=max(n_events // 12, 50),
+                            n_events=n_events, seed=seed)
+    store = None
+    if kv != "mem":
+        d = _os.path.join(kv_dir, "query") if kv_dir else None
+        store = make_store(kv, directory=d, hot_bytes=int(hot_mb * 2**20))
+    gm = GraphManager(uni, ev, store=store,
+                      L=max(n_events // 40, 64), k=2,
+                      diff_fn="intersection")
+    if budget_mb > 0:
+        gm.enable_advisor(budget_bytes=int(budget_mb * 2**20))
+    print(f"ready: {n_events} events, tmax={int(ev.time[-1])}, "
+          f"doc-batch={batch}", file=sys.stderr, flush=True)
+
+    lines = (open(input_path) if input_path and input_path != "-"
+             else sys.stdin)
+    served = ok = 0
+    t0 = time.perf_counter()
+    try:
+        for envelope in run_query_documents(gm, lines, batch=batch):
+            print(envelope, flush=True)
+            served += 1
+            ok += '"ok": true' in envelope
+    finally:
+        if lines is not sys.stdin:
+            lines.close()
+        wall = time.perf_counter() - t0
+        st = gm.store.stats
+        print(f"served {served} documents ({ok} ok) in {wall:.2f}s "
+              f"({served / max(wall, 1e-9):.0f} docs/s)  "
+              f"kv: {st.gets} gets, {st.bytes_read / 2**20:.2f} MiB",
+              file=sys.stderr, flush=True)
+        gm.close()
+        if store is not None:
+            store.close()
+
+
 def serve_evolve(n_events: int, intervals: int, points: int, op: str,
                  seed: int = 0, window_frac: float = 0.05) -> None:
     """Drive an evolutionary-query workload — ``intervals`` dense
@@ -228,7 +329,8 @@ def serve_din(batch: int) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("model", "snapshots", "evolve"),
+    ap.add_argument("--mode", choices=("model", "snapshots", "evolve",
+                                       "query"),
                     default="model")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
@@ -256,6 +358,15 @@ def main() -> None:
                          "(default: fresh temp dir)")
     ap.add_argument("--hot-mb", type=float, default=8.0,
                     help="tiered store: hot-tier byte budget")
+    ap.add_argument("--input", default=None,
+                    help="query mode: NDJSON document file ('-' = stdin, "
+                         "the default)")
+    ap.add_argument("--doc-batch", type=int, default=8,
+                    help="query mode: merge up to this many concurrent "
+                         "documents into one co-batched Steiner plan")
+    ap.add_argument("--advisor-mb", type=float, default=0.0,
+                    help="query mode: enable the materialization advisor "
+                         "under this GraphPool budget (0 = off)")
     ap.add_argument("--intervals", type=int, default=8,
                     help="evolve mode: number of evolutionary queries")
     ap.add_argument("--points", type=int, default=32,
@@ -265,7 +376,11 @@ def main() -> None:
                              "masks"),
                     help="evolve mode: incremental operator")
     args = ap.parse_args()
-    if args.mode == "snapshots":
+    if args.mode == "query":
+        serve_query(args.events, args.doc_batch, args.input,
+                    codec=args.codec, kv=args.kv, kv_dir=args.kv_dir,
+                    hot_mb=args.hot_mb, budget_mb=args.advisor_mb)
+    elif args.mode == "snapshots":
         serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
                         batch=args.multipoint_batch, codec=args.codec,
                         kv=args.kv, kv_dir=args.kv_dir, hot_mb=args.hot_mb)

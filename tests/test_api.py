@@ -1,0 +1,271 @@
+"""GraphQuery documents: validation, the fluent builder, JSON round-trip
+(deterministic + hypothesis), the typed error taxonomy, and the HistGraph
+context-manager lifecycle."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (DocumentError, GraphQuery, Q, QueryError,
+                       TimeExpressionError, UnknownAttributeError)
+from repro.core import GraphManager
+from repro.core.errors import AttrOptionsError
+from repro.core.events import GraphHistoryBuilder
+from repro.core.query import TimeExpression, parse_attr_options
+
+
+def make_universe():
+    b = GraphHistoryBuilder()
+    b.add_node(0, 1, attrs={"name": "x", "salary": 10.0, "age": 3.0})
+    b.add_node(1, 1)
+    b.add_edge(0, 1, 2, attrs={"weight": 1.0, "label": "e"})
+    return b.finalize()[0]
+
+
+# ---------------------------------------------------------------------------
+# document validation + builder
+# ---------------------------------------------------------------------------
+
+
+def test_builder_kinds():
+    assert Q.at(5).build() == GraphQuery(kind="snapshot", t=5)
+    assert Q.at(5, 9).build().kind == "multipoint"
+    assert Q.at([5, 9, 9]).build().times == (5, 9)   # dedup, order kept
+    d = Q.expr("t0 & ~t1", [3, 7]).attrs("+node:all").build()
+    assert (d.kind, d.expr, d.times, d.attrs) == ("expr", "t0 & ~t1",
+                                                  (3, 7), "+node:all")
+    d = Q.between(10, 20).build()
+    assert (d.kind, d.ts, d.te) == ("interval", 10, 20)
+    d = Q.between(10, 20).compute("pagerank", damping=0.9).build()
+    assert d.kind == "evolve" and d.op == "pagerank"
+    assert d.op_kwargs == {"damping": 0.9}
+    assert d.times[0] == 10 and d.times[-1] == 20 and len(d.times) <= 32
+    # explicit sampling
+    assert Q.between(0, 9).step(3).compute("degree").build().times == \
+        (0, 3, 6, 9)
+    assert len(Q.between(0, 100).points(5).compute("degree").build().times) == 5
+    # snapshot builder upgraded by compute
+    d = Q.at(5).compute("density").build()
+    assert d.kind == "evolve" and d.times == (5,)
+    # consistency / reply hints
+    d = Q.at(5).fresh().full().use_current(False).build()
+    assert d.no_cache and d.reply == "full" and not d.use_current
+
+
+@pytest.mark.parametrize("bad, field", [
+    (dict(kind="nope"), "kind"),
+    (dict(kind="snapshot"), "t"),
+    (dict(kind="snapshot", t=1, times=[2]), "times"),
+    (dict(kind="multipoint"), "times"),
+    (dict(kind="multipoint", times=[]), "times"),
+    (dict(kind="expr", times=[1, 2]), "expr"),
+    (dict(kind="interval", ts=3), "te"),
+    (dict(kind="evolve", times=[1], op="masks", reply="huge"), "reply"),
+    (dict(kind="snapshot", t=1, op_kwargs={"x": 1}), "op_kwargs"),
+    (dict(kind="snapshot", t=1, incremental=False), "incremental"),
+])
+def test_document_validation_errors(bad, field):
+    with pytest.raises(DocumentError) as ei:
+        GraphQuery(**bad).validate()
+    assert ei.value.position == field
+    assert ei.value.to_dict()["kind"] == "document"
+
+
+def test_from_dict_strictness():
+    with pytest.raises(DocumentError):
+        GraphQuery.from_dict({"kind": "snapshot", "t": 1, "bogus": 2})
+    with pytest.raises(DocumentError):
+        GraphQuery.from_dict({"t": 1})
+    with pytest.raises(DocumentError):
+        GraphQuery.from_dict({"kind": "snapshot", "t": 1, "v": 99})
+    with pytest.raises(DocumentError):
+        GraphQuery.from_dict({"kind": "snapshot", "t": "soon"})
+    with pytest.raises(DocumentError):
+        GraphQuery.from_dict([1, 2])
+    with pytest.raises(DocumentError) as ei:
+        GraphQuery.from_json("{not json")
+    assert ei.value.code == "document"
+    # evolve defaults its operator like the legacy entry point
+    assert GraphQuery.from_dict({"kind": "evolve", "times": [1]}).op == "masks"
+
+
+def test_non_serializable_programmatic_documents():
+    uni = make_universe()
+    opts = parse_attr_options("+node:age", uni)
+    doc = GraphQuery(kind="snapshot", t=1, attrs=opts)
+    with pytest.raises(DocumentError):
+        doc.to_dict()
+    from repro.core.temporal import PageRankOp
+    doc = GraphQuery(kind="evolve", times=(1,), op=PageRankOp())
+    with pytest.raises(DocumentError):
+        doc.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+_DOCS = [
+    Q.at(5).build(),
+    Q.at(5).attrs("+node:all-node:salary").fresh().full().build(),
+    Q.at(3, 1, 4, 1, 5).use_current(False).build(),
+    Q.expr("(t0 & ~t1) | t2", [10, 20, 30]).build(),
+    Q.between(0, 1000).build(),
+    Q.between(0, 90).step(30).compute("pagerank", damping=0.9,
+                                      tol=1e-4).build(),
+    Q.evolve([7, 11], "components").attrs("+edge:all").build(),
+]
+
+
+@pytest.mark.parametrize("doc", _DOCS, ids=lambda d: d.kind)
+def test_json_roundtrip(doc):
+    wire = doc.to_json()
+    back = GraphQuery.from_json(wire)
+    assert back == doc
+    assert back.to_json() == wire            # canonical form is a fixpoint
+    json.loads(wire)                          # valid JSON
+
+
+def test_roundtrip_drops_defaults():
+    d = json.loads(Q.at(5).build().to_json())
+    assert set(d) == {"v", "kind", "t"}
+
+
+# -- generative round-trip (hypothesis) -------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _times = st.lists(st.integers(0, 10**6), min_size=1, max_size=6)
+    _attrs = st.sampled_from(["", "+node:all", "+edge:all",
+                              "+node:all-node:salary+edge:weight"])
+
+    def _tree(n):
+        return st.recursive(
+            st.tuples(st.just("t"), st.integers(0, n - 1)),
+            lambda kids: st.one_of(
+                st.tuples(st.just("not"), kids),
+                st.tuples(st.just("and"), kids, kids),
+                st.tuples(st.just("or"), kids, kids)),
+            max_leaves=8)
+
+    @st.composite
+    def _docs(draw):
+        kind = draw(st.sampled_from(
+            ("snapshot", "multipoint", "expr", "interval", "evolve")))
+        common = dict(attrs=draw(_attrs),
+                      use_current=draw(st.booleans()),
+                      no_cache=draw(st.booleans()),
+                      reply=draw(st.sampled_from(("summary", "full"))))
+        if kind == "snapshot":
+            return GraphQuery(kind=kind, t=draw(st.integers(0, 10**6)),
+                              **common)
+        if kind == "interval":
+            return GraphQuery(kind=kind, ts=draw(st.integers(0, 10**6)),
+                              te=draw(st.integers(0, 10**6)), **common)
+        times = tuple(draw(_times))
+        if kind == "multipoint":
+            return GraphQuery(kind=kind, times=times, **common)
+        if kind == "expr":
+            tex = TimeExpression(list(times),
+                                 draw(_tree(len(times))))
+            return GraphQuery(kind=kind, expr=tex.to_infix(), times=times,
+                              **common)
+        return GraphQuery(kind=kind, times=times,
+                          op=draw(st.sampled_from(
+                              ("masks", "degree", "density", "pagerank",
+                               "components"))),
+                          op_kwargs=draw(st.sampled_from(
+                              ({}, {"damping": 0.9}))),
+                          incremental=draw(st.booleans()), **common)
+
+    @settings(max_examples=200, deadline=None)
+    @given(doc=_docs())
+    def test_json_roundtrip_hypothesis(doc):
+        back = GraphQuery.from_json(doc.to_json())
+        assert back == doc
+        assert back.to_json() == doc.to_json()
+        if doc.kind == "expr":   # TimeExpression survives the infix trip
+            assert back.time_expression().expr == doc.time_expression().expr
+
+
+# ---------------------------------------------------------------------------
+# typed error taxonomy
+# ---------------------------------------------------------------------------
+
+
+def test_attr_errors_are_typed_and_positioned():
+    uni = make_universe()
+    with pytest.raises(UnknownAttributeError) as ei:
+        parse_attr_options("+node:all+edge:nope", uni)
+    err = ei.value
+    assert isinstance(err, (QueryError, KeyError))
+    assert err.position == len("+node:all+edge:")
+    assert str(err) == "unknown edge attribute 'nope'"   # no KeyError quoting
+    assert err.to_dict() == {"kind": "unknown-attribute",
+                             "message": "unknown edge attribute 'nope'",
+                             "position": 15}
+    with pytest.raises(AttrOptionsError) as ei:
+        parse_attr_options("+node:all junk", uni)
+    assert isinstance(ei.value, ValueError)
+    assert ei.value.position == 9            # spaces survive in attr specs
+
+
+def test_time_expression_errors_are_typed_and_positioned():
+    with pytest.raises(TimeExpressionError) as ei:
+        TimeExpression.parse("t0 & #", [1, 2])
+    assert isinstance(ei.value, ValueError)
+    assert ei.value.position == 3            # de-spaced offset of '#'
+    with pytest.raises(TimeExpressionError) as ei:
+        TimeExpression.parse("(t0", [1])
+    assert ei.value.position == 3            # end of input
+    with pytest.raises(TimeExpressionError) as ei:
+        TimeExpression.parse("t0 & t9", [1, 2])
+    assert ei.value.position == 3
+    assert ei.value.to_dict()["kind"] == "time-expression"
+
+
+def test_unknown_operator_is_typed():
+    from repro.core.errors import UnknownOperatorError
+    from repro.core.temporal import resolve_op
+    with pytest.raises(UnknownOperatorError):
+        resolve_op("no-such-op", {})
+
+
+# ---------------------------------------------------------------------------
+# HistGraph context manager + pool reclamation
+# ---------------------------------------------------------------------------
+
+
+def test_hist_graph_context_manager(churn):
+    uni, ev = churn
+    gm = GraphManager(uni, ev, L=100, k=2, cache_bytes=0)
+    t = int(ev.time[600])
+    before = gm.pool.num_active()
+    with gm.get_hist_graph(t) as h:
+        gid = h.gid
+        assert gm.pool.num_active() == before + 1
+        n = h.num_nodes()
+        assert n > 0
+    # exit released the bit pair and the cleaner reclaimed the row
+    assert gid not in gm.pool.table
+    assert gm.pool.num_active() == before
+    free_before = len(gm.pool._free_bits)
+    with gm.get_hist_graph(t) as h2:
+        # the recycled row is reused, not grown
+        assert len(gm.pool._free_bits) == free_before - 2
+    h2.close()                                # double close is a no-op
+    assert gm.pool.num_active() == before
+    # expr HistGraphs participate in the same lifecycle
+    tex = TimeExpression.parse("t0 | t1",
+                               [int(ev.time[300]), int(ev.time[900])])
+    with gm.get_hist_graph_expr(tex) as g:
+        st = g.to_state()
+        assert st.node_mask.sum() == g.num_nodes()
+    assert g.gid not in gm.pool.table
+    gm.close()

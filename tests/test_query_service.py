@@ -1,0 +1,246 @@
+"""QueryService: differential suite (every legacy GraphManager entry point
+vs its GraphQuery equivalent, bit-identical on the churn fixture, both
+checked against the replay oracle), co-batched plan merging, stats
+envelopes, and the serve.py wire loop."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import GraphQuery, Q
+from repro.core import GraphManager, TimeExpression, replay
+from repro.core.query import parse_attr_options
+
+from conftest import assert_state_equal
+
+
+@pytest.fixture(scope="module")
+def gm(churn):
+    uni, ev = churn
+    g = GraphManager(uni, ev, L=100, k=2, diff_fn="balanced")
+    yield g
+    g.close()
+
+
+def _times(ev, *idx):
+    return [int(ev.time[i]) for i in idx]
+
+
+# ---------------------------------------------------------------------------
+# differential: legacy entry point == GraphQuery equivalent == oracle
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_differential(gm, churn):
+    uni, ev = churn
+    for t in _times(ev, 150, 700, 1150):
+        legacy = gm.get_snapshot(t, "+node:all+edge:all")
+        doc = Q.at(t).attrs("+node:all+edge:all").build()
+        via_doc = gm.query.run(doc).value
+        oracle = replay(uni, ev, t)
+        assert_state_equal(via_doc, legacy, msg=f"t={t}")
+        assert legacy.equal(via_doc)
+        assert_state_equal(via_doc, oracle, msg=f"t={t} vs oracle")
+        assert oracle.equal(via_doc)
+
+
+def test_multipoint_differential(gm, churn):
+    uni, ev = churn
+    ts = _times(ev, 100, 400, 800, 1100)
+    legacy = gm.get_snapshots(ts, "+node:all")
+    res = gm.query.run(Q.at(ts).attrs("+node:all").build())
+    assert sorted(res.value) == sorted(legacy)
+    for t in ts:
+        assert legacy[t].equal(res.value[t])
+        assert_state_equal(res.value[t], replay(uni, ev, t))
+    assert res.stats["targets"] == len(ts)
+
+
+def test_expr_differential(gm, churn):
+    uni, ev = churn
+    t1, t2 = _times(ev, 300, 1000)
+    tex = TimeExpression.parse("t0 & ~t1", [t1, t2])
+    legacy = gm.get_hist_graph_expr(tex, "+node:all")
+    res = gm.query.run(Q.expr("t0 & ~t1", [t1, t2]).attrs("+node:all")
+                       .build())
+    tr1, tr2 = replay(uni, ev, t1), replay(uni, ev, t2)
+    assert np.array_equal(legacy.node_mask, res.value.node_mask)
+    assert np.array_equal(legacy.edge_mask, res.value.edge_mask)
+    assert np.array_equal(res.value.edge_mask,
+                          tr1.edge_mask & ~tr2.edge_mask)
+    # HistGraph escape hatch reproduces the document's state bit-for-bit
+    assert legacy.to_state().equal(res.value)
+    legacy.close()
+
+
+def test_interval_differential(gm, churn):
+    uni, ev = churn
+    ts, te = _times(ev, 200, 900)
+    legacy = gm.get_hist_graph_interval(ts, te)
+    via_doc = gm.query.run(Q.between(ts, te).build()).value
+    for k in legacy:
+        assert np.array_equal(legacy[k], via_doc[k]), k
+
+
+def test_evolve_differential(gm, churn):
+    uni, ev = churn
+    ts = sorted(_times(ev, 500, 600, 700, 800))
+    legacy = gm.evolve(ts, "degree")
+    res = gm.query.run(Q.evolve(ts, "degree").build())
+    assert legacy.times == res.value.times
+    for a, b in zip(legacy.values, res.value.values):
+        assert np.array_equal(a, b)
+    # masks agree with the oracle at every point
+    masks = gm.query.run(Q.evolve(ts, "masks").build()).value
+    for t, (nm, em) in masks:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(nm[: truth.node_mask.size], truth.node_mask)
+        assert np.array_equal(em[: truth.edge_mask.size], truth.edge_mask)
+
+
+def test_hist_graphs_use_current_threaded(gm, churn):
+    uni, ev = churn
+    ts = _times(ev, 350, 1050)
+    hs = gm.get_hist_graphs(ts, use_current=False)
+    hs2 = gm.get_hist_graphs(ts)   # default still routes through current
+    for h, h2, t in zip(hs, hs2, ts):
+        truth = replay(uni, ev, t)
+        assert np.array_equal(h.node_mask, truth.node_mask)
+        assert np.array_equal(h.edge_mask, h2.edge_mask)
+        h.close()
+        h2.close()
+
+
+# ---------------------------------------------------------------------------
+# batching, stats, errors
+# ---------------------------------------------------------------------------
+
+
+def test_run_batch_merges_point_documents(churn):
+    uni, ev = churn
+    with GraphManager(uni, ev, L=100, k=2, cache_bytes=0) as g:
+        ts = _times(ev, 100, 500, 900)
+        docs = [Q.at(ts[0]).build(), Q.at(ts[1:]).build(),
+                Q.expr("t0 | t1", ts[:2]).build(),
+                Q.between(ts[0], ts[1]).build()]
+        results = g.query.run_batch(docs)
+        assert [r.kind for r in results] == ["snapshot", "multipoint",
+                                             "expr", "interval"]
+        assert all(r.ok for r in results)
+        # the three point documents shared ONE merged Steiner plan
+        assert results[0].stats["merged_docs"] == 3
+        assert results[0].stats["targets"] == 3        # distinct times
+        assert results[0].stats["plan_cost"] == \
+            results[1].stats["plan_cost"]
+        assert "merged_docs" not in results[3].stats
+        for t, st in results[1].value.items():
+            assert_state_equal(st, replay(uni, ev, t), check_attrs=False)
+
+
+def test_run_batch_error_isolation(gm, churn):
+    uni, ev = churn
+    t = int(ev.time[400])
+    docs = [Q.at(t).build(),
+            GraphQuery(kind="snapshot", t=t, attrs="+node:missing"),
+            GraphQuery(kind="expr", expr="t0 &", times=(t,))]
+    results = gm.query.run_batch(docs, on_error="envelope")
+    assert results[0].ok
+    assert not results[1].ok
+    assert results[1].error.code == "unknown-attribute"
+    assert not results[2].ok
+    assert results[2].error.code == "time-expression"
+    from repro.api import TimeExpressionError
+    with pytest.raises(TimeExpressionError):
+        gm.query.run_batch([docs[2]])       # on_error="raise" default
+
+
+def test_stats_envelope_fields(churn):
+    uni, ev = churn
+    with GraphManager(uni, ev, L=100, k=2) as g:
+        t = int(ev.time[800])
+        r1 = g.query.run(Q.at(t).build())
+        assert r1.stats["kv_gets"] > 0 and r1.stats["kv_bytes"] > 0
+        assert r1.stats["plan_cost"] > 0 and r1.stats["wall_s"] > 0
+        assert r1.stats["cache_hits"] == 0
+        r2 = g.query.run(Q.at(t).build())            # exact-repeat hit
+        assert r2.stats["cache_hits"] == 1 and r2.stats["kv_gets"] == 0
+        assert r2.value.equal(r1.value)
+        r3 = g.query.run(Q.at(t).fresh().build())    # consistency hint
+        assert r3.stats["cache_hits"] == 0 and r3.stats["kv_gets"] > 0
+        assert r3.value.equal(r1.value)
+
+
+def test_envelope_json_shape(gm, churn):
+    uni, ev = churn
+    t = int(ev.time[300])
+    env = json.loads(gm.query.run(Q.at(t).build()).to_json())
+    assert env["ok"] and env["v"] == 1 and env["kind"] == "snapshot"
+    truth = replay(uni, ev, t)
+    assert env["result"]["nodes"] == int(truth.node_mask.sum())
+    assert env["result"]["edges"] == int(truth.edge_mask.sum())
+    assert set(env["stats"]) >= {"wall_s", "kv_gets", "kv_bytes",
+                                 "plan_cost", "cache_hits"}
+    # full reply carries the live slot lists
+    full = json.loads(gm.query.run(Q.at(t).full().build()).to_json())
+    assert full["result"]["node_slots"] == \
+        np.nonzero(truth.node_mask)[0].tolist()
+    # deterministic: same document, same payload CRCs
+    env2 = json.loads(gm.query.run(Q.at(t).build()).to_json())
+    assert env2["result"] == env["result"]
+
+
+# ---------------------------------------------------------------------------
+# the serve.py wire loop
+# ---------------------------------------------------------------------------
+
+
+def test_wire_loop_in_process(churn):
+    from repro.launch.serve import run_query_documents
+    uni, ev = churn
+    with GraphManager(uni, ev, L=100, k=2) as g:
+        t1, t2 = int(ev.time[200]), int(ev.time[1000])
+        lines = [
+            json.dumps({"kind": "multipoint", "times": [t1, t2]}),
+            "",                                        # blank lines skipped
+            json.dumps({"kind": "snapshot", "t": t1}),
+            "this is not json",
+            json.dumps({"kind": "evolve", "times": [t1, t1 + 50],
+                        "op": "density"}),
+            json.dumps({"kind": "snapshot"}),          # invalid document
+        ]
+        envs = [json.loads(s) for s in run_query_documents(g, lines,
+                                                           batch=3)]
+    assert [e["ok"] for e in envs] == [True, True, False, True, False]
+    assert envs[0]["kind"] == "multipoint"
+    assert {p["t"] for p in envs[0]["result"]["points"]} == {t1, t2}
+    truth = replay(uni, ev, t1)
+    assert envs[1]["result"]["nodes"] == int(truth.node_mask.sum())
+    assert envs[2]["error"]["kind"] == "document"
+    assert envs[3]["result"]["values"][0]["nodes"] == \
+        int(truth.node_mask.sum())
+    assert envs[4]["error"]["kind"] == "document"
+    assert envs[4]["error"]["position"] == "t"
+
+
+@pytest.mark.slow
+def test_wire_loop_subprocess():
+    """The acceptance-criterion invocation: echo a document into
+    ``python -m repro.launch.serve --mode query`` and get a valid JSON
+    envelope with execution stats back."""
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    doc = '{"kind": "multipoint", "times": [50, 150], "attrs": ""}\n'
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--mode", "query",
+         "--events", "1500"],
+        input=doc, capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=root)
+    assert proc.returncode == 0, proc.stderr
+    env = json.loads(proc.stdout.strip())
+    assert env["ok"] and env["kind"] == "multipoint"
+    assert len(env["result"]["points"]) == 2
+    assert env["stats"]["kv_gets"] > 0
+    assert "served 1 documents (1 ok)" in proc.stderr
