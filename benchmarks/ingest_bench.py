@@ -1,0 +1,199 @@
+"""BENCH_ingest: sustained ingest rate under group commit, query latency
+under write pressure, and freshness lag.
+
+Three measurements over identical synthetic churn histories on a
+disk-backed ``LogFileKV`` (fsync is the phenomenon being measured):
+
+* ``single`` — the naive durable write path: one event per commit group,
+  so one WAL append **and one fsync per event**;
+* ``grouped`` — the pipeline's group commit: the same events in
+  ``GROUP``-event groups, one fsync per group.  The acceptance gate is
+  ``grouped >= 10x single`` events/s;
+* ``query under ingest`` — snapshot-query p99 on an idle manager vs the
+  same queries while the threaded pipeline commits and rolls over
+  continuously.  Gate: concurrent p99 < 2x idle p99 (epoch pinning means
+  readers never block on the writer).
+
+Freshness lag (event append → visible in a pinned query view) comes from
+the pipeline's per-group enqueue→publish clock and is reported as
+mean / p99 ms.  Emits rows in the run.py contract and writes
+``BENCH_ingest.json``.  Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.ingest_bench --quick
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import GraphManager
+from repro.core.ingest import IngestPipeline
+from repro.data.generators import churn_network
+from repro.storage.kv import LogFileKV, TieredKV
+
+OUT_JSON = "BENCH_ingest.json"
+GROUP = 256
+SPEEDUP_GATE = 10.0
+P99_DEGRADATION_GATE = 2.0
+
+
+def _p99(xs: list[float]) -> float:
+    return float(np.quantile(np.asarray(xs), 0.99)) if xs else float("nan")
+
+
+L = 512                    # leaf size: rollovers amortize over L events
+
+
+def _ingest_rate(uni, ev, n_build: int, chunk: int, group: int) -> dict:
+    """Events/s streaming ev[n_build:] in ``chunk``-event appends with
+    commit groups of ``group`` events (group=chunk → one fsync per
+    append; chaining chunk=1 models per-event durability)."""
+    tmp = tempfile.mkdtemp(prefix="bench-ingest-")
+    gm = GraphManager(uni, ev[:n_build], L=L, k=2,
+                      diff_fn="intersection", store=LogFileKV(tmp))
+    pipe = IngestPipeline(gm, group_events=group)
+    gm._ingest = pipe
+    n = len(ev) - n_build
+    t0 = time.perf_counter()
+    for i in range(n_build, len(ev), chunk):
+        pipe.append(ev[i:i + chunk])
+    wall = time.perf_counter() - t0
+    stats = pipe.stats()
+    gm.close()
+    return {"events_per_s": n / wall, "wall_s": wall,
+            "groups": stats["groups_committed"],
+            "rollovers": stats["rollovers"],
+            "freshness_lag_mean_ms": stats["freshness_lag_mean_ms"],
+            "freshness_lag_p99_ms": stats["freshness_lag_p99_ms"]}
+
+
+def _query_p99(gm, times, n_queries: int, repeats: int = 3) -> float:
+    """Median of ``repeats`` consecutive per-batch p99s.  A p99 over a few
+    hundred samples is set by its 1-3 worst outliers, so a single
+    scheduler or filesystem hiccup would otherwise decide the gate; the
+    median keeps the measurement about the system, not the fluke."""
+    from repro.api.document import Q
+    svc = gm.query
+    rng = np.random.default_rng(3)
+    p99s = []
+    for _ in range(repeats):
+        lats = []
+        for t in rng.choice(times, size=n_queries):
+            # .fresh(): bypass the snapshot cache so every query pays a
+            # real plan — cache-hit luck would mask writer interference
+            doc = Q.at(int(t)).attrs("+node:all").fresh().build()
+            t0 = time.perf_counter()
+            svc.run(doc)
+            lats.append(time.perf_counter() - t0)
+        p99s.append(_p99(lats))
+    return float(np.median(p99s))
+
+
+def bench_ingest(quick: bool = False):
+    n = 3_000 if quick else 10_000
+    n_single = 150 if quick else 400      # per-event fsync is slow by design
+    # per-batch sample count (x3 batches in _query_p99): enough that p99
+    # is a real percentile, small enough that all three busy batches fit
+    # inside the paced writer's active window
+    n_queries = 250 if quick else 500
+    uni, ev = churn_network(n_initial_edges=max(n // 12, 50),
+                            n_events=n, seed=21)
+    n_build = n // 5
+
+    # -- single-event-fsync baseline over a truncated stream ---------------
+    short = ev[:n_build + n_single]
+    single = _ingest_rate(uni, short, n_build, chunk=1, group=1)
+    # -- group commit over the full stream ---------------------------------
+    grouped = _ingest_rate(uni, ev, n_build, chunk=GROUP, group=GROUP)
+    speedup = grouped["events_per_s"] / single["events_per_s"]
+
+    # -- query latency: idle vs concurrent ingest --------------------------
+    # hot-tier reads: queries must not share the WAL's log file (an fsync
+    # in flight can block a same-file read at the filesystem level)
+    tmp = tempfile.mkdtemp(prefix="bench-ingest-q-")
+    gm = GraphManager(uni, ev[:n // 2], L=L, k=2,
+                      diff_fn="intersection",
+                      store=TieredKV(LogFileKV(tmp), hot_bytes=64 << 20))
+    tmax_idle = int(ev.time[n // 2 - 1])
+    times = np.linspace(0, tmax_idle, 128).astype(int)
+    idle_p99 = _query_p99(gm, times, n_queries)
+
+    pipe = IngestPipeline(gm, group_events=64, threaded=True)
+    gm._ingest = pipe
+    stop = threading.Event()
+
+    def writer() -> None:
+        # paced at ~2k events/s — a sustained production write rate below
+        # the box's fold-saturation point.  Tail latency is only defined
+        # at an offered load the system can absorb; at saturation every
+        # system's p99 is unbounded (classic latency-vs-throughput
+        # separation — the throughput half is the group-commit gate above)
+        i = n // 2
+        while not stop.is_set():
+            j = min(n, i + 32)
+            if i < j:
+                pipe.submit(ev[i:j])
+                i = j
+            time.sleep(0.016)
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    busy_p99 = _query_p99(gm, times, n_queries)
+    stop.set()
+    th.join(timeout=30)
+    pipe.drain(timeout=60)
+    degradation = busy_p99 / idle_p99
+    gm.close()
+
+    report = {
+        "n_events": n, "group": GROUP,
+        "single_fsync_events_per_s": round(single["events_per_s"], 1),
+        "grouped_events_per_s": round(grouped["events_per_s"], 1),
+        "group_commit_speedup": round(speedup, 2),
+        "speedup_gate": SPEEDUP_GATE,
+        "speedup_ok": bool(speedup >= SPEEDUP_GATE),
+        "freshness_lag_mean_ms": round(
+            grouped["freshness_lag_mean_ms"] or 0.0, 3),
+        "freshness_lag_p99_ms": round(
+            grouped["freshness_lag_p99_ms"] or 0.0, 3),
+        "idle_query_p99_ms": round(idle_p99 * 1e3, 3),
+        "concurrent_query_p99_ms": round(busy_p99 * 1e3, 3),
+        "p99_degradation": round(degradation, 2),
+        "p99_gate": P99_DEGRADATION_GATE,
+        "p99_ok": bool(degradation < P99_DEGRADATION_GATE),
+        "rollovers": grouped["rollovers"],
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return [
+        ("ingest/single_fsync", 1e6 / single["events_per_s"],
+         {"events_per_s": report["single_fsync_events_per_s"]}),
+        ("ingest/group_commit", 1e6 / grouped["events_per_s"],
+         {"events_per_s": report["grouped_events_per_s"],
+          "speedup": report["group_commit_speedup"],
+          "speedup_ok": report["speedup_ok"],
+          "freshness_lag_p99_ms": report["freshness_lag_p99_ms"]}),
+        ("ingest/query_under_ingest", report["concurrent_query_p99_ms"],
+         {"idle_p99_ms": report["idle_query_p99_ms"],
+          "degradation": report["p99_degradation"],
+          "p99_ok": report["p99_ok"]}),
+        ("ingest/report", 0.0, {"json": OUT_JSON}),
+    ]
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_ingest(quick=args.quick):
+        print(f"{name},{us:.1f},\"{json.dumps(derived)}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     args = ap.parse_args()
 
-    from . import (materialize_bench, paper_figs, query_bench,
+    from . import (ingest_bench, materialize_bench, paper_figs, query_bench,
                    retrieval_bench, roofline_report, storage_bench,
                    temporal_bench)
 
@@ -27,6 +27,7 @@ def main() -> None:
         temporal_bench.bench_temporal,
         storage_bench.bench_storage,
         query_bench.bench_query,
+        ingest_bench.bench_ingest,
         paper_figs.fig6_vs_copylog,
         paper_figs.fig7_vs_interval_tree,
         paper_figs.fig8a_graphpool_memory,

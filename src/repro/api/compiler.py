@@ -88,9 +88,12 @@ class CompiledQuery:
                 self.doc.use_current, self.doc.no_cache)
 
     def finish(self, service: "QueryService",
-               states: dict[int, "MaterializedState"] | None) -> Any:
+               states: dict[int, "MaterializedState"] | None,
+               dg=None) -> Any:
         """Produce the result payload from retrieved ``states`` (point
-        kinds) or by calling the engine directly (interval / evolve)."""
+        kinds) or by calling the engine directly (interval / evolve).
+        ``dg`` is the epoch-pinned index version the whole document must
+        resolve against (defaults to the manager's current one)."""
         d = self.doc
         if d.kind == "snapshot":
             return states[d.t]
@@ -99,14 +102,16 @@ class CompiledQuery:
         if d.kind == "expr":
             return expr_state(self.tex, states)
         gm = service.gm
+        if dg is None:
+            dg = gm.dg
         if d.kind == "interval":
-            return gm.dg.get_interval(d.ts, d.te)
+            return dg.get_interval(d.ts, d.te)
         # evolve: the temporal engine plans/retrieves its first snapshot
         # itself (through the service shims, so cache/advisor apply)
         return service.temporal_engine().evolve(
             list(d.times), d.op, attr_options=self.options,
             use_current=d.use_current, incremental=d.incremental,
-            **d.op_kwargs)
+            dg=dg, **d.op_kwargs)
 
 
 class QueryCompiler:

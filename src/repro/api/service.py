@@ -183,63 +183,92 @@ class QueryService:
     # -- the single snapshot-retrieval implementation ------------------------
     def retrieve_points(self, times: Sequence[int], options: AttrOptions,
                         use_current: bool = True, no_cache: bool = False,
+                        pin=None,
                         ) -> tuple[dict[int, "MaterializedState"], dict]:
         """Cached + advised + batched retrieval of ``times``: cache hits
         split off, misses become one merged Steiner plan executed with
         async KV prefetch.  Returns ``(states, stats)``; results are
-        bit-identical to a cold ``DeltaGraph.get_snapshot`` per point."""
+        bit-identical to a cold ``DeltaGraph.get_snapshot`` per point.
+
+        The whole call resolves against one epoch-pinned index version
+        (``core/epoch.py``): the caller's ``pin`` if given (so a document
+        retrieves and finishes on the same version), else one acquired
+        here.  Cache keys carry an epoch tag — results at times below the
+        ingest watermark are stable across epochs, results at/past it
+        (plans crossing CURRENT / the unfolded tail) only hit within the
+        epoch that produced them."""
         gm = self.gm
         times = [int(t) for t in dict.fromkeys(int(t) for t in times)]
-        out: dict[int, "MaterializedState"] = {}
-        stats = {"cache_hits": 0, "plan_cost": 0.0, "payload_fetches": 0,
-                 "plan_steps": 0}
-        misses: list[int] = []
-        for t in times:
-            if gm.cache is not None and not no_cache:
-                hit = gm.cache.get(SnapshotCache.key(t, options, use_current))
-                if hit is not None:
-                    gm.workload.record_cache_hit()
-                    stats["cache_hits"] += 1
-                    out[t] = hit
-                    continue
-            misses.append(t)
-        if misses:
-            plan = gm.dg.plan_multipoint(misses, options, use_current)
-            # prefetch for batch-shaped queries (even when cache hits leave
-            # a single miss) — legacy ``get_snapshots`` parity; a lone
-            # singlepoint query stays synchronous (``get_snapshot`` parity:
-            # thread-queue latency beats overlap on fast stores)
-            pf = gm.prefetcher if len(times) > 1 else None
-            states = gm.dg.execute(plan, options, pool=gm.pool, prefetch=pf)
-            # per-target deps: only the pins on a target's own branch
-            # invalidate its entry, not every pin the batch touched
-            deps = plan.per_target_source_nids()
-            for t in misses:
-                out[t] = states[t]
-                if gm.cache is not None:
-                    gm.cache.put(SnapshotCache.key(t, options, use_current),
-                                 states[t], deps=deps.get(t))
-            cs = plan.cost_summary()
-            stats["plan_cost"] += cs["plan_cost"]
-            stats["payload_fetches"] += cs["payload_fetches"]
-            stats["plan_steps"] += cs["plan_steps"]
-            if gm.advisor is not None:
-                with gm._advisor_lock:
-                    if gm.advisor is not None:
-                        gm.advisor.on_query(n=len(misses))
-        return out, stats
+        own_pin = pin is None
+        if own_pin:
+            pin = gm.epochs.acquire()
+        try:
+            dg = pin.data.dg
+            watermark = pin.data.max_time
+
+            def key_for(t: int) -> tuple:
+                tag = (SnapshotCache.STABLE if t < watermark else pin.id)
+                return SnapshotCache.key(t, options, use_current, tag)
+
+            out: dict[int, "MaterializedState"] = {}
+            stats = {"cache_hits": 0, "plan_cost": 0.0, "payload_fetches": 0,
+                     "plan_steps": 0, "epoch": pin.id,
+                     "epoch_events": pin.data.n_events}
+            misses: list[int] = []
+            for t in times:
+                if gm.cache is not None and not no_cache:
+                    hit = gm.cache.get(key_for(t))
+                    if hit is not None:
+                        gm.workload.record_cache_hit()
+                        stats["cache_hits"] += 1
+                        # live ingest may have grown the slot universe
+                        # since the entry was cached
+                        out[t] = hit.resized(gm.universe)
+                        continue
+                misses.append(t)
+            if misses:
+                plan = dg.plan_multipoint(misses, options, use_current)
+                # prefetch for batch-shaped queries (even when cache hits
+                # leave a single miss) — legacy ``get_snapshots`` parity; a
+                # lone singlepoint query stays synchronous (``get_snapshot``
+                # parity: thread-queue latency beats overlap on fast stores)
+                pf = gm.prefetcher if len(times) > 1 else None
+                states = dg.execute(plan, options, pool=gm.pool, prefetch=pf)
+                # per-target deps: only the pins on a target's own branch
+                # invalidate its entry, not every pin the batch touched
+                deps = plan.per_target_source_nids()
+                for t in misses:
+                    out[t] = states[t]
+                    if gm.cache is not None:
+                        gm.cache.put(key_for(t), states[t], deps=deps.get(t))
+                cs = plan.cost_summary()
+                stats["plan_cost"] += cs["plan_cost"]
+                stats["payload_fetches"] += cs["payload_fetches"]
+                stats["plan_steps"] += cs["plan_steps"]
+                if gm.advisor is not None:
+                    with gm._advisor_lock:
+                        if gm.advisor is not None:
+                            gm.advisor.on_query(n=len(misses))
+            return out, stats
+        finally:
+            if own_pin:
+                pin.release()
 
     # -- execution ----------------------------------------------------------
     def _execute(self, cq: CompiledQuery) -> QueryResult:
         clock = _StatClock(self.gm.store)
         pts = cq.point_times
-        if pts:
-            states, rstats = self.retrieve_points(
-                pts, cq.options, cq.doc.use_current, cq.doc.no_cache)
-            value = cq.finish(self, states)
-        else:
-            rstats = {}
-            value = cq.finish(self, None)
+        # one pin for the whole document: retrieval and finish() (interval /
+        # evolve engine calls included) resolve against one index version
+        with self.gm.epochs.acquire() as pin:
+            if pts:
+                states, rstats = self.retrieve_points(
+                    pts, cq.options, cq.doc.use_current, cq.doc.no_cache,
+                    pin=pin)
+                value = cq.finish(self, states, dg=pin.data.dg)
+            else:
+                rstats = {"epoch": pin.id, "epoch_events": pin.data.n_events}
+                value = cq.finish(self, None, dg=pin.data.dg)
         stats = {**clock.done(), **rstats, "targets": len(pts)}
         return QueryResult(cq.kind, True, value, stats, query=cq.doc)
 
@@ -305,16 +334,19 @@ class QueryService:
             try:
                 clock = _StatClock(self.gm.store)
                 cq0 = compiled[idxs[0]]
-                states, rstats = self.retrieve_points(
-                    times, cq0.options, cq0.doc.use_current,
-                    cq0.doc.no_cache)
-                stats = {**clock.done(), **rstats, "targets": len(times),
-                         "merged_docs": len(idxs)}
-                for i in idxs:
-                    results[i] = QueryResult(
-                        compiled[i].kind, True,
-                        compiled[i].finish(self, states), dict(stats),
-                        query=compiled[i].doc)
+                with self.gm.epochs.acquire() as pin:
+                    states, rstats = self.retrieve_points(
+                        times, cq0.options, cq0.doc.use_current,
+                        cq0.doc.no_cache, pin=pin)
+                    stats = {**clock.done(), **rstats,
+                             "targets": len(times),
+                             "merged_docs": len(idxs)}
+                    for i in idxs:
+                        results[i] = QueryResult(
+                            compiled[i].kind, True,
+                            compiled[i].finish(self, states,
+                                               dg=pin.data.dg),
+                            dict(stats), query=compiled[i].doc)
             except Exception as e:
                 if on_error == "raise":
                     raise

@@ -23,6 +23,7 @@ and the ragged right spine ("cap") is torn down and rebuilt.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import heapq
 import json
@@ -172,9 +173,24 @@ class DeltaGraph:
         # recent (unindexed) events, §6
         self.recent = EventList.empty()
         self._total_events = 0
+        # red/green rebuilds (core/ingest.py): when set, payload deletion
+        # is *deferred* — keys append here instead of hitting the store, so
+        # readers pinned to an older epoch keep their cap deltas until the
+        # epoch registry drains them
+        self.reclaim_sink: list | None = None
+        # cooperative-yield hook for background folds (core/ingest.py):
+        # called between fold sub-steps so a rollover running on a worker
+        # thread hands the GIL to query threads instead of holding it for
+        # the whole multi-ms fold
+        self.nice = None
         # online query-traffic histogram (materialize.WorkloadStats),
         # attached by GraphManager; every execute() records into it
         self.workload = None
+
+    def _nice(self) -> None:
+        n = self.nice
+        if n is not None:
+            n()
 
     # ------------------------------------------------------------------ build
     def build(self, events: EventList) -> "DeltaGraph":
@@ -289,11 +305,92 @@ class DeltaGraph:
             chunk = self.recent[: self.L]
             self.recent = self.recent[self.L:]
             self._uncap()
+            self._nice()
             state = apply_events(self._last_leaf_state, chunk, forward=True)
             self._store_eventlist(self.leaf_nids[-1], chunk)
+            self._nice()
             self._emit_leaf(state, pos=self.leaf_pos[-1] + self.L,
                             time=int(chunk.time[-1]))
             self._cap()
+            self._nice()
+
+    # ----------------------------------------------------- red/green epochs
+    def clone_for_commit(self, ev: EventList) -> "DeltaGraph":
+        """Cheap per-group epoch clone: shares the whole skeleton with this
+        graph and differs only in the ``recent`` tail.  The clone must never
+        be structurally mutated (``append_events``) — rollovers go through
+        :meth:`fork`."""
+        dg = copy.copy(self)
+        if len(ev):
+            dg.recent = EventList.concat([self.recent, ev])
+            dg._total_events = self._total_events + len(ev)
+        if dg._last_leaf_state is not None:
+            dg._last_leaf_state = dg._last_leaf_state.resized(self.universe)
+        return dg
+
+    def fork(self) -> "DeltaGraph":
+        """Structural copy-on-write fork for shadow (green) rebuilds: own
+        skeleton containers so ``append_events`` on the fork never mutates
+        what readers pinned to this (red) version see.  Node/edge records
+        and frontier states are shared — folds only add new entries and pop
+        cap entries from the fork's own dicts."""
+        dg = copy.copy(self)
+        dg.nodes = dict(self.nodes)
+        dg.edges = dict(self.edges)
+        dg.adj = {nid: list(eids) for nid, eids in self.adj.items()}
+        dg.leaf_nids = list(self.leaf_nids)
+        dg.leaf_pos = list(self.leaf_pos)
+        dg.leaf_time = list(self.leaf_time)
+        dg._frontier = [[list(lv) for lv in h] for h in self._frontier]
+        dg._cap_nodes = list(self._cap_nodes)
+        dg._cap_edges = list(self._cap_edges)
+        dg.reclaim_sink = None
+        return dg
+
+    def restore_append_state(self) -> None:
+        """Rebuild the in-memory append machinery (`_last_leaf_state` and the
+        bulk-load frontier) that :meth:`save_skeleton` does not persist, by
+        retrieving the relevant node states through the index itself — after
+        this a loaded skeleton accepts :meth:`append_events` again (crash
+        recovery, ``core/ingest.py``)."""
+        opts = AttrOptions(tuple(range(self.universe.num_node_attrs)),
+                           tuple(range(self.universe.num_edge_attrs)))
+        cap = set(self._cap_nodes)
+        # pending frontier membership: any non-cap leaf/interior node with no
+        # non-cap delta parent still awaits a parent at depth = level - 1
+        pending: list[list[list[int]]] = []
+        want: set[int] = {self.leaf_nids[-1]}
+        for h in range(len(self.diff_fns)):
+            levels: list[list[int]] = []
+            for nid, info in self.nodes.items():
+                if info.kind == "superroot" or nid in cap:
+                    continue
+                if info.kind == "interior" and info.hierarchy != h:
+                    continue
+                has_parent = any(
+                    e.kind == "delta" and e.dst == nid and not e.is_cap
+                    and self.nodes[e.src].kind == "interior"
+                    and self.nodes[e.src].hierarchy == h
+                    for e in (self.edges[eid] for eid in self.adj[nid]))
+                if has_parent:
+                    continue
+                depth = info.level - 1
+                while len(levels) <= depth:
+                    levels.append([])
+                levels[depth].append(nid)
+                want.add(nid)
+            # nid order is creation (chronological) order within a level
+            for lv in levels:
+                lv.sort()
+            pending.append(levels)
+        plans = {nid: self.plan_node(nid, opts) for nid in sorted(want)}
+        states = {}
+        for nid, plan in plans.items():
+            states[nid] = self.execute(plan, opts)[("node", nid)]
+        self._last_leaf_state = states[self.leaf_nids[-1]].copy()
+        self._frontier = [
+            [[(nid, states[nid]) for nid in lv] for lv in levels]
+            for levels in pending]
 
     # ------------------------------------------------------------ persistence
     def _new_node(self, kind: str, level: int, **kw) -> int:
@@ -342,9 +439,11 @@ class DeltaGraph:
         struct_stored = 0
         for p in range(self.P):
             sub = self._partition_delta(d, p)
+            self._nice()
             b = col.encode_delta_struct(sub)
             struct_stored += len(b)
             self.store.put((p, pid, col.STRUCT), b)
+            self._nice()
             for c in range(A_n):
                 m = sub.node_attr.col == c
                 ad = AttrDelta(sub.node_attr.slot[m], sub.node_attr.col[m],
@@ -353,6 +452,7 @@ class DeltaGraph:
                 wn[c] += len(b)
                 wn_lg[c] += ad.nbytes()
                 self.store.put((p, pid, f"{col.NODEATTR}.{c}"), b)
+                self._nice()
             for c in range(A_e):
                 m = sub.edge_attr.col == c
                 ad = AttrDelta(sub.edge_attr.slot[m], sub.edge_attr.col[m],
@@ -361,6 +461,7 @@ class DeltaGraph:
                 we[c] += len(b)
                 we_lg[c] += ad.nbytes()
                 self.store.put((p, pid, f"{col.EDGEATTR}.{c}"), b)
+                self._nice()
         return wn, we, wn_lg, we_lg, struct_stored
 
     def _partition_delta(self, d: Delta, p: int) -> Delta:
@@ -396,10 +497,13 @@ class DeltaGraph:
             # component *arrays* (pre-encode) — attr components re-key per
             # column without decoding a just-encoded blob
             comps = col.eventlist_components(sub)
+            self._nice()
             b_struct = col.pack_arrays(comps[col.ELIST_STRUCT])
             self.store.put((p, pid, col.ELIST_STRUCT), b_struct)
+            self._nice()
             self.store.put((p, pid, col.ELIST_TRANSIENT),
                            col.pack_arrays(comps[col.ELIST_TRANSIENT]))
+            self._nice()
             n_struct += comps[col.ELIST_STRUCT]["slot"].size
             w_struct += len(b_struct)
             w_struct_lg += col.logical_nbytes(comps[col.ELIST_STRUCT])
@@ -413,6 +517,7 @@ class DeltaGraph:
                     ws[c] += len(b)
                     ws_lg[c] += col.logical_nbytes(sub_arrays)
                     self.store.put((p, pid, f"{base}.{c}"), b)
+                    self._nice()
         eid = self._next_eid
         self._next_eid += 1
         # dst is the leaf about to be emitted (nid of next node)
@@ -424,14 +529,20 @@ class DeltaGraph:
                                 w_edgeattr_logical=we_lg))
 
     def _delete_payload(self, pid: int, comps, attrs: bool) -> None:
+        keys = []
         for p in range(self.P):
             for c in comps:
-                self.store.delete((p, pid, c))
+                keys.append((p, pid, c))
             if attrs:
                 for c in range(self.universe.num_node_attrs):
-                    self.store.delete((p, pid, f"{col.NODEATTR}.{c}"))
+                    keys.append((p, pid, f"{col.NODEATTR}.{c}"))
                 for c in range(self.universe.num_edge_attrs):
-                    self.store.delete((p, pid, f"{col.EDGEATTR}.{c}"))
+                    keys.append((p, pid, f"{col.EDGEATTR}.{c}"))
+        if self.reclaim_sink is not None:
+            self.reclaim_sink.extend(keys)
+        else:
+            for key in keys:
+                self.store.delete(key)
 
     # ----------------------------------------------------------------- stats
     @staticmethod
@@ -1015,11 +1126,14 @@ class DeltaGraph:
             "cap_nodes": self._cap_nodes, "cap_edges": self._cap_edges,
             "total_events": self._total_events,
             "nodes": [dataclasses.asdict(n) for n in self.nodes.values()],
-            "edges": [{**dataclasses.asdict(e),
-                       "w_nodeattr": None, "w_edgeattr": None,
-                       "w_nodeattr_logical": None, "w_edgeattr_logical": None}
-                      for e in self.edges.values()],
         }
+        self._nice()
+        payload["edges"] = [{**dataclasses.asdict(e),
+                             "w_nodeattr": None, "w_edgeattr": None,
+                             "w_nodeattr_logical": None,
+                             "w_edgeattr_logical": None}
+                            for e in self.edges.values()]
+        self._nice()
         arrays = {}
         for e in self.edges.values():
             if e.w_nodeattr is not None:
@@ -1031,6 +1145,7 @@ class DeltaGraph:
             if e.w_edgeattr_logical is not None:
                 arrays[f"wel{e.eid}"] = e.w_edgeattr_logical
         arrays["json"] = np.frombuffer(json.dumps(payload).encode(), np.uint8)
+        self._nice()
         self.store.put((0, -1, "skeleton"), col.pack_arrays(arrays))
 
     @staticmethod

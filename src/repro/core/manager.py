@@ -129,20 +129,55 @@ class GraphManager:
                  cache_bytes: int = 32 << 20,
                  cache_entries: int = 256,
                  prefetch_workers: int = 4) -> None:
-        self.universe = universe
         # default store honors REPRO_KV (mem | logfile | tiered) so every
         # entry point can run disk-resident without code changes; stores we
         # created are closed with the manager
-        self._owns_store = store is None
-        self.store = store if store is not None else (store_from_env()
-                                                      or MemKV())
-        self.dg = DeltaGraph(universe, self.store, L=L, k=k, diff_fn=diff_fn,
-                             diff_params=diff_params,
-                             num_partitions=num_partitions,
-                             partition_fn=partition_fn).build(events)
+        owns_store = store is None
+        store = store if store is not None else (store_from_env() or MemKV())
+        dg = DeltaGraph(universe, store, L=L, k=k, diff_fn=diff_fn,
+                        diff_params=diff_params,
+                        num_partitions=num_partitions,
+                        partition_fn=partition_fn).build(events)
+        current = replay(universe, events,
+                         int(events.time[-1]) if len(events) else 0)
+        self._wire(universe, dg, current, events, owns_store=owns_store,
+                   cache_bytes=cache_bytes, cache_entries=cache_entries,
+                   prefetch_workers=prefetch_workers)
+
+    @classmethod
+    def open(cls, universe: GraphUniverse, store: KVStore, *,
+             cache_bytes: int = 32 << 20, cache_entries: int = 256,
+             prefetch_workers: int = 4) -> "GraphManager":
+        """Reopen a manager from a persisted skeleton + write-ahead log
+        (crash recovery — ``core/ingest.py``): loads the last durable
+        skeleton, replays the WAL tail past the folded prefix, and rebuilds
+        the current graph.  Every group-committed event is present."""
+        from .events import apply_events
+        from .ingest import recover_index
+        dg = recover_index(universe, store)
+        current = apply_events(dg._last_leaf_state, dg.recent, forward=True)
+        current.edge_mask &= ~universe.edge_transient[:current.edge_mask.size]
+        current.node_mask &= ~universe.node_transient[:current.node_mask.size]
+        gm = cls.__new__(cls)
+        gm._wire(universe, dg, current, dg.recent, owns_store=False,
+                 cache_bytes=cache_bytes, cache_entries=cache_entries,
+                 prefetch_workers=prefetch_workers)
+        return gm
+
+    def _wire(self, universe: GraphUniverse, dg: DeltaGraph,
+              current: MaterializedState, events: EventList, *,
+              owns_store: bool, cache_bytes: int, cache_entries: int,
+              prefetch_workers: int) -> None:
+        """Common wiring shared by build (``__init__``) and recovery
+        (:meth:`open`)."""
+        from .epoch import EpochData, EpochRegistry
+        from .epoch import NO_TIME
+        self.universe = universe
+        self._owns_store = owns_store
+        self.store = dg.store
+        self.dg = dg
         self.pool = GraphPool(universe)
-        self.pool.set_current(replay(universe, events,
-                                     int(events.time[-1]) if len(events) else 0))
+        self.pool.set_current(current)
         # workload-aware materialization + caching (core/materialize.py)
         self.workload = WorkloadStats()
         self.dg.workload = self.workload
@@ -164,12 +199,23 @@ class GraphManager:
         # skeleton's materialization marks, so they are serialized here —
         # see ARCHITECTURE.md "Concurrency" for what is and isn't safe
         self._advisor_lock = threading.Lock()
+        # epoch-versioned index (§6 / core/epoch.py): readers pin the
+        # current epoch at query entry; the ingest pipeline publishes a new
+        # one per commit group and per rollover swap
+        n_recent = len(dg.recent)
+        max_t = (int(dg.recent.time[-1]) if n_recent
+                 else (dg.leaf_time[-1] if dg.leaf_pos[-1] > 0 else NO_TIME))
+        self.epochs = EpochRegistry(EpochData(dg, dg._total_events, max_t))
+        self._ingest = None
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
         """Shut down the prefetch thread pool (idempotent; threads only
         exist if a batched retrieval ran) and any store this manager
         created itself (flushes disk-backed tiers)."""
+        if self._ingest is not None:
+            self._ingest.close()
+            self._ingest = None
         if self.prefetcher is not None:
             # drain in-flight fetches before the store's handles go away
             self.prefetcher.close(wait=self._owns_store)
@@ -307,15 +353,23 @@ class GraphManager:
         return self.query.run(doc).value
 
     # ------------------------------------------------------------- updates
+    @property
+    def ingest(self):
+        """The :class:`~repro.core.ingest.IngestPipeline` bound to this
+        manager (created lazily, synchronous mode).  For threaded
+        production-rate ingest construct one explicitly:
+        ``IngestPipeline(gm, threaded=True)``."""
+        if self._ingest is None:
+            from .ingest import IngestPipeline
+            self._ingest = IngestPipeline(self)
+        return self._ingest
+
     def update(self, ev: EventList) -> None:
-        """Live update path (§6): current graph + index maintenance."""
-        self.pool.update_current(ev)
-        before = len(self.dg.leaf_nids)
-        self.dg.append_events(ev)
-        if len(self.dg.leaf_nids) != before:
-            self.pool.mark_flushed()
-        if self.cache is not None and len(ev):
-            self.cache.invalidate_from(int(ev.time.min()))
+        """Live update path (§6), shimmed onto the ingest pipeline: the
+        batch commits as one group (WAL append + one durability barrier),
+        publishes a new epoch, and folds full leaves red/green — readers
+        that pinned an epoch mid-query are unaffected."""
+        self.ingest.append(ev)
 
     # -------------------------------------------------------- materialization
     def enable_advisor(self, budget_bytes: int = 64 << 20, *,

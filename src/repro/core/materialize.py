@@ -212,10 +212,20 @@ def _state_nbytes(st: "MaterializedState") -> int:
 class SnapshotCache:
     """Byte-bounded LRU of retrieved :class:`MaterializedState`s.
 
-    Keys are ``(t, node_cols, edge_cols, use_current)``.  Values are
-    defensive copies both ways: the cache never aliases caller state, so a
-    hit is bit-identical to a cold retrieval (tested property).
+    Keys are ``(t, node_cols, edge_cols, use_current, epoch_tag)``.  The
+    epoch tag scopes an entry's validity under live ingest
+    (``core/epoch.py``): ``"s"`` marks a *stable* result — ``t`` lies
+    strictly below the ingest watermark, so chronological appends can
+    never change it and it serves hits across epochs — while a volatile
+    result (``t`` at/past the watermark, where the plan crossed CURRENT
+    or the unfolded ``recent`` tail) is tagged with the integer epoch id
+    it was computed at and can only be hit by queries pinned to that same
+    epoch.  Values are defensive copies both ways: the cache never
+    aliases caller state, so a hit is bit-identical to a cold retrieval
+    (tested property).
     """
+
+    STABLE = "s"
 
     def __init__(self, max_bytes: int = 32 << 20, max_entries: int = 256) -> None:
         self.max_bytes = int(max_bytes)
@@ -230,8 +240,10 @@ class SnapshotCache:
         self._lock = threading.RLock()
 
     @staticmethod
-    def key(t: int, options: AttrOptions, use_current: bool) -> tuple:
-        return (int(t), options.node_cols, options.edge_cols, bool(use_current))
+    def key(t: int, options: AttrOptions, use_current: bool,
+            epoch_tag: "str | int" = STABLE) -> tuple:
+        return (int(t), options.node_cols, options.edge_cols,
+                bool(use_current), epoch_tag)
 
     def get(self, key: tuple) -> "MaterializedState | None":
         with self._lock:
@@ -279,11 +291,26 @@ class SnapshotCache:
             return len(dead)
 
     def invalidate_from(self, t: int) -> int:
-        """Drop entries at or after time ``t`` — plus every entry whose plan
-        could have crossed the current graph (``use_current=True``), since
-        live updates move CURRENT itself."""
+        """Drop entries at or after time ``t`` — the only ones an append
+        of events with ``min(time) == t`` can change.  Entries below ``t``
+        survive even if their plan crossed the current graph: under
+        chronological ingest a snapshot at an earlier time is a function
+        of history the new events don't touch (the coarse
+        use_current-flush this replaces is regression-pinned in
+        tests/test_materialize.py)."""
         with self._lock:
-            dead = [k for k in self._d if k[0] >= t or k[3]]
+            dead = [k for k in self._d if k[0] >= t]
+            for k in dead:
+                self._evict_key(k)
+            return len(dead)
+
+    def invalidate_epochs_before(self, eid: int) -> int:
+        """Reclaim volatile entries tagged with a superseded epoch id —
+        they can never be hit again (queries pin the current epoch), this
+        just frees the bytes early."""
+        with self._lock:
+            dead = [k for k in self._d
+                    if k[4] != self.STABLE and k[4] < eid]
             for k in dead:
                 self._evict_key(k)
             return len(dead)

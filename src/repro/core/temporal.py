@@ -487,7 +487,7 @@ class TemporalEngine:
                op: str | EvolveOp | Callable = "masks", *,
                attr_options: str | AttrOptions = "",
                use_current: bool = True, incremental: bool = True,
-               **op_kwargs) -> EvolveResult:
+               dg=None, **op_kwargs) -> EvolveResult:
         gm = self.gm
         if isinstance(times, TimeExpression):
             times = list(times.times)
@@ -504,9 +504,18 @@ class TemporalEngine:
             return self._recompute(times, operator, ctx, opts, use_current,
                                    t_start)
 
-        slicer = IntervalSlicer(gm.dg, opts, prefetcher=gm.prefetcher)
+        # dg is the epoch-pinned index version when the service threads one
+        # through (api/compiler.py) — every slice and the first snapshot
+        # then resolve against one consistent version under live ingest
+        pinned = dg is not None
+        dg = dg if pinned else gm.dg
+        slicer = IntervalSlicer(dg, opts, prefetcher=gm.prefetcher)
         slicer.prefetch_interval(times[0], times[-1])
-        state = gm.get_snapshot(times[0], opts, use_current=use_current)
+        if pinned:
+            state = dg.get_snapshot(times[0], opts, pool=gm.pool,
+                                    use_current=use_current)
+        else:
+            state = gm.get_snapshot(times[0], opts, use_current=use_current)
         state = state.resized(uni).copy()
         values = [operator.init(ctx, state, times[0])]
         iters = [operator.iters]
@@ -517,7 +526,6 @@ class TemporalEngine:
             values.append(operator.step(ctx, state, delta, hi))
             iters.append(operator.iters)
         wall = time.perf_counter() - t_start
-        dg = gm.dg
         gm.workload.record_interval(dg._leaf_for_time(times[0]),
                                     dg._leaf_for_time(times[-1]),
                                     len(times), wall_s=wall)

@@ -12,6 +12,13 @@
   (PageRank / components / density over dense timepoint intervals)
   served by the incremental temporal engine (core/temporal.py) vs the
   per-snapshot recompute loop;
+* ``--mode ingest`` — live mixed read/write serving: a writer thread
+  streams events through the threaded
+  :class:`~repro.core.ingest.IngestPipeline` (group commit + red/green
+  rollovers) while reader threads issue snapshot/interval documents
+  against epoch-pinned consistent views; reports sustained events/s,
+  query latency under write pressure, and freshness lag, ending with one
+  machine-parseable ``INGEST_SUMMARY`` line (the CI smoke contract);
 * ``--mode model`` (default) — batched autoregressive decode for LM archs
   (reduced config on CPU; the production mesh decode path is exercised by
   dryrun.py) and batched CTR scoring for DIN.
@@ -227,6 +234,124 @@ def serve_query(n_events: int, batch: int, input_path: str | None,
             store.close()
 
 
+def serve_ingest(n_events: int, duration_s: float, readers: int,
+                 group: int, seed: int = 0, codec: str = "v2",
+                 kv: str = "mem", kv_dir: str | None = None,
+                 hot_mb: float = 8.0) -> None:
+    """Mixed ingest + query serving: one writer streams the live tail of
+    a synthetic history through the threaded ingest pipeline, paced to
+    fill ``duration_s``, while ``readers`` threads issue ``Q.at`` /
+    ``Q.between`` documents against epoch-pinned views.  Reports
+    sustained events/s, freshness lag (append → visible), per-query
+    latency under write pressure, and rollover/epoch counters; the last
+    stdout line is ``INGEST_SUMMARY <json>`` for CI to parse."""
+    import json
+    import os as _os
+    import threading
+    from collections import deque
+
+    from ..api.document import Q
+    from ..core import GraphManager
+    from ..core.ingest import IngestPipeline
+    from ..data.generators import churn_network
+    from ..storage import codec as codec_mod
+    from ..storage.kv import make_store
+
+    codec_mod.set_default_codec(codec)
+    uni, ev = churn_network(n_initial_edges=max(n_events // 12, 50),
+                            n_events=n_events, seed=seed)
+    n_build = max(n_events // 5, 200)
+    store = None
+    if kv != "mem":
+        d = _os.path.join(kv_dir, "ingest") if kv_dir else None
+        store = make_store(kv, directory=d, hot_bytes=int(hot_mb * 2**20))
+    gm = GraphManager(uni, ev[:n_build], store=store,
+                      L=max(n_events // 40, 64), k=2,
+                      diff_fn="intersection")
+    pipe = IngestPipeline(gm, group_events=group, threaded=True)
+    gm._ingest = pipe
+    svc = gm.query
+    print(f"ready: {n_build} built, {n_events - n_build} live events, "
+          f"{readers} readers, {duration_s:.0f}s", file=sys.stderr,
+          flush=True)
+
+    stop = threading.Event()
+    docs_served = [0] * max(readers, 1)
+    doc_fail = [0] * max(readers, 1)
+    lat: deque[float] = deque(maxlen=65536)
+
+    def reader(idx: int) -> None:
+        rng = np.random.default_rng(1000 + idx)
+        while not stop.is_set():
+            hi = max(int(gm.epochs.current_data.max_time), 1)
+            docs = [Q.at(int(t)).attrs("+node:all").build()
+                    for t in rng.integers(0, hi + 1, size=3)]
+            a, b = sorted(int(t) for t in rng.integers(0, hi + 1, size=2))
+            docs.append(Q.between(a, b + 1).build())
+            t0 = time.perf_counter()
+            for r in svc.run_batch(docs, on_error="envelope"):
+                docs_served[idx] += 1
+                doc_fail[idx] += not r.ok
+            lat.append((time.perf_counter() - t0) / len(docs))
+
+    threads = [threading.Thread(target=reader, args=(i,), daemon=True)
+               for i in range(readers)]
+    for th in threads:
+        th.start()
+
+    chunks = []
+    i = n_build
+    rng = np.random.default_rng(seed)
+    while i < n_events:
+        j = min(n_events, i + int(rng.integers(group // 2, group * 2)))
+        chunks.append((i, j))
+        i = j
+    pace = duration_s / max(len(chunks), 1)
+    t_start = time.perf_counter()
+    for n, (i, j) in enumerate(chunks):
+        pipe.submit(ev[i:j])
+        sleep = t_start + (n + 1) * pace - time.perf_counter()
+        if sleep > 0:
+            time.sleep(sleep)
+    pipe.drain(timeout=max(duration_s, 60.0))
+    wall = time.perf_counter() - t_start
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+
+    ps = pipe.stats()
+    lats = sorted(lat)
+    summary = {
+        "events_per_s": round(ps["committed_events"] / max(wall, 1e-9), 1),
+        "committed_events": ps["committed_events"],
+        "groups": ps["groups_committed"],
+        "rollovers": ps["rollovers"],
+        "freshness_lag_p99_ms": (round(ps["freshness_lag_p99_ms"], 3)
+                                 if ps["freshness_lag_p99_ms"] else None),
+        "docs_served": sum(docs_served),
+        "docs_failed": sum(doc_fail),
+        "query_p50_ms": (round(1e3 * lats[len(lats) // 2], 3)
+                         if lats else None),
+        "query_p99_ms": (round(1e3 * lats[int(len(lats) * 0.99)], 3)
+                         if lats else None),
+        "epochs": ps["epochs"]["current_id"],
+        "wall_s": round(wall, 2),
+    }
+    print(f"ingested {summary['committed_events']} events in {wall:.1f}s "
+          f"({summary['events_per_s']:.0f} ev/s, "
+          f"{summary['rollovers']} rollovers)  "
+          f"queries: {summary['docs_served']} docs "
+          f"({summary['docs_failed']} failed) "
+          f"p99={summary['query_p99_ms']} ms  "
+          f"freshness p99={summary['freshness_lag_p99_ms']} ms",
+          file=sys.stderr, flush=True)
+    print("INGEST_SUMMARY " + json.dumps(summary, sort_keys=True),
+          flush=True)
+    gm.close()
+    if store is not None:
+        store.close()
+
+
 def serve_evolve(n_events: int, intervals: int, points: int, op: str,
                  seed: int = 0, window_frac: float = 0.05) -> None:
     """Drive an evolutionary-query workload — ``intervals`` dense
@@ -330,7 +455,7 @@ def serve_din(batch: int) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("model", "snapshots", "evolve",
-                                       "query"),
+                                       "query", "ingest"),
                     default="model")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
@@ -367,6 +492,13 @@ def main() -> None:
     ap.add_argument("--advisor-mb", type=float, default=0.0,
                     help="query mode: enable the materialization advisor "
                          "under this GraphPool budget (0 = off)")
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="ingest mode: seconds to pace the live event "
+                         "stream over")
+    ap.add_argument("--readers", type=int, default=2,
+                    help="ingest mode: concurrent query reader threads")
+    ap.add_argument("--group", type=int, default=256,
+                    help="ingest mode: commit-group event target")
     ap.add_argument("--intervals", type=int, default=8,
                     help="evolve mode: number of evolutionary queries")
     ap.add_argument("--points", type=int, default=32,
@@ -384,6 +516,10 @@ def main() -> None:
         serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
                         batch=args.multipoint_batch, codec=args.codec,
                         kv=args.kv, kv_dir=args.kv_dir, hot_mb=args.hot_mb)
+    elif args.mode == "ingest":
+        serve_ingest(args.events, args.duration, args.readers, args.group,
+                     codec=args.codec, kv=args.kv, kv_dir=args.kv_dir,
+                     hot_mb=args.hot_mb)
     elif args.mode == "evolve":
         serve_evolve(args.events, args.intervals, args.points, args.op)
     elif family_of(args.arch) == "recsys":

@@ -134,15 +134,20 @@ def varint_encode(u: np.ndarray) -> bytes:
     n = u.size
     if n == 0:
         return b""
+    umax = int(u.max())
+    if umax < 0x80:
+        # all single-byte (the common case: zigzagged deltas, small ids)
+        return u.astype(np.uint8).tobytes()
     nb = np.ones(n, np.int64)
-    for k in range(1, 10):
+    # width passes only up to the widest value present, not all 10
+    k = 1
+    while k < 10 and umax >= (1 << (7 * k)):
         nb += (u >= (np.uint64(1) << np.uint64(7 * k))).astype(np.int64)
+        k += 1
     out = np.zeros(int(nb.sum()), np.uint8)
     starts = np.concatenate([[0], np.cumsum(nb)[:-1]])
-    for j in range(10):
+    for j in range(k):
         m = nb > j
-        if not m.any():
-            break
         byte = ((u[m] >> np.uint64(7 * j)) & np.uint64(0x7F)).astype(np.uint8)
         cont = (nb[m] - 1 > j).astype(np.uint8) << 7
         out[starts[m] + j] = byte | cont
@@ -362,10 +367,31 @@ class _Reader:
         return out
 
 
+# Cooperative-yield hook for background encoders.  A thread that encodes
+# large bundles while latency-sensitive readers share the interpreter
+# (the ingest fold worker) installs a per-thread hook; _encode_v2 calls
+# it between arrays so no single pack_arrays() is a multi-ms GIL hold.
+# Thread-local on purpose: readers and foreground builds are unaffected.
+_nice_tl = threading.local()
+
+
+def set_encode_nice(hook) -> None:
+    """Install (or clear, with ``None``) this thread's between-array
+    encode yield hook."""
+    _nice_tl.hook = hook
+
+
+def _encode_nice() -> None:
+    hook = getattr(_nice_tl, "hook", None)
+    if hook is not None:
+        hook()
+
+
 def _encode_v2(arrays: dict[str, np.ndarray]) -> bytes:
     recs = [_struct.pack("<I", len(arrays))]
     raw_size = 0
     for name, a in arrays.items():
+        _encode_nice()
         a = np.ascontiguousarray(a)
         raw_size += a.nbytes
         nb = name.encode()

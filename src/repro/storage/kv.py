@@ -177,6 +177,22 @@ class KVStore:
     def flush(self) -> None:
         pass
 
+    def sync(self) -> None:
+        """Durability barrier: on return, every preceding ``put`` survives a
+        process or power crash.  Unlike :meth:`flush` this does *not* have
+        to persist derived metadata (e.g. the log index) — backends may
+        implement it as a bare data fsync and rely on recovery to rebuild
+        the rest.  Default delegates to :meth:`flush`."""
+        self.flush()
+
+    def put_group(self, pairs: Iterable[tuple[Key, bytes]]) -> None:
+        """Group commit (§6 ingest): write every pair, then pay **one**
+        durability barrier for the whole group — the write pipeline's
+        fsync-per-group surface (vs. fsync-per-event via put+sync)."""
+        for k, v in pairs:
+            self.put(k, v)
+        self.sync()
+
     def close(self) -> None:
         pass
 
@@ -257,6 +273,10 @@ class LogFileKV(KVStore):
         if os.path.exists(stray):
             os.remove(stray)
         self._recover()
+        # high-water mark of bytes known durable (fsynced); bytes past it
+        # would be lost by a power crash — tests/faultlib.py truncates to
+        # this point to model one
+        self._synced_size = self._log_size
         self._fh = open(self.log_path, "ab")
         self._rfh = open(self.log_path, "rb")
 
@@ -426,6 +446,7 @@ class LogFileKV(KVStore):
                 if committed:
                     self._index = new_index
                     self._log_size = pos
+                    self._synced_size = pos
                     self._dead_bytes = 0
                 self._fh = open(self.log_path, "ab")
                 self._rfh = open(self.log_path, "rb")
@@ -464,7 +485,29 @@ class LogFileKV(KVStore):
         with self._lock:
             self._fh.flush()
             os.fsync(self._fh.fileno())
+            self._synced_size = self._log_size
             self._write_index_locked()
+
+    def sync(self) -> None:
+        """Data-only durability barrier: fsync the log without rewriting
+        ``index.json``.  Recovery scans the log tail past the indexed end
+        (:meth:`_recover`), so synced-but-unindexed records are safe — this
+        is what makes group commit ~free compared to :meth:`flush`, which
+        rewrites the whole index every call.
+
+        The fsync itself runs *outside* the store lock: concurrent readers
+        must not stall behind the disk for the duration of a barrier (the
+        ingest pipeline fsyncs once per commit group while query threads
+        keep reading payloads).  An append racing the fsync only means
+        *more* bytes became durable than this call promised."""
+        with self._lock:
+            self._fh.flush()
+            size = self._log_size
+            fd = self._fh.fileno()
+        os.fsync(fd)
+        with self._lock:
+            if size > self._synced_size:
+                self._synced_size = size
 
     def close(self) -> None:
         if self._fh.closed:   # idempotent — managers close owned stores
@@ -632,6 +675,9 @@ class TieredKV(KVStore):
     def flush(self) -> None:
         self.cold.flush()
 
+    def sync(self) -> None:
+        self.cold.sync()
+
     def close(self) -> None:
         self.cold.close()
 
@@ -677,6 +723,10 @@ class PartitionedKV(KVStore):
     def flush(self) -> None:
         for p in self.parts:
             p.flush()
+
+    def sync(self) -> None:
+        for p in self.parts:
+            p.sync()
 
     def close(self) -> None:
         for p in self.parts:

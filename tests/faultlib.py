@@ -1,0 +1,95 @@
+"""Reusable fault-injection harness for crash-consistency tests.
+
+Generalizes the monkeypatched-crash pattern from the PR-4 storage tests
+into two composable primitives:
+
+* :class:`CrashInjector` — arms the ingest pipeline's named checkpoint
+  hook (:data:`repro.core.ingest.CRASH_POINTS`) so the pipeline raises
+  :class:`InjectedCrash` the ``n``-th time it reaches a chosen point.
+  The injector records every checkpoint it saw, so a test can assert the
+  crash actually fired where it intended.
+
+* :func:`power_fail` — models the power going out *at* the crash: the
+  process state is gone (the caller abandons its manager) and the disk
+  keeps only what was fsynced.  Implemented by truncating the
+  ``LogFileKV`` log to its ``_synced_size`` high-water mark — bytes
+  appended after the last durability barrier are torn away exactly as a
+  real power cut would.
+
+The canonical loop (``tests/test_ingest_faults.py``)::
+
+    inj = CrashInjector("commit:pre-sync")
+    inj.arm(pipe)
+    with pytest.raises(InjectedCrash):
+        ... ingest until the checkpoint fires ...
+    acked = pipe.committed_events
+    power_fail(store)
+    gm2 = GraphManager.open(universe, LogFileKV(store.dir))
+    assert gm2.dg._total_events >= acked      # no acked event lost
+"""
+from __future__ import annotations
+
+import os
+
+from repro.storage.kv import LogFileKV
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by an armed :class:`CrashInjector` at its checkpoint."""
+
+    def __init__(self, point: str, hit: int) -> None:
+        super().__init__(f"injected crash at {point!r} (hit #{hit})")
+        self.point = point
+        self.hit = hit
+
+
+class CrashInjector:
+    """Raise :class:`InjectedCrash` the ``n``-th time ``point`` is hit."""
+
+    def __init__(self, point: str, n: int = 1) -> None:
+        self.point = point
+        self.n = int(n)
+        self.hits = 0
+        self.fired = False
+        self.seen: list[str] = []
+
+    def __call__(self, name: str) -> None:
+        self.seen.append(name)
+        if name == self.point:
+            self.hits += 1
+            if self.hits >= self.n and not self.fired:
+                self.fired = True
+                raise InjectedCrash(name, self.hits)
+
+    def arm(self, pipeline) -> "CrashInjector":
+        pipeline.crash_hook = self
+        return self
+
+    @staticmethod
+    def disarm(pipeline) -> None:
+        pipeline.crash_hook = None
+
+
+def power_fail(store: LogFileKV) -> str:
+    """Kill the machine at this instant: drop everything not fsynced.
+
+    Closes the store's file handles and truncates the log to the last
+    durability barrier (``store.sync()`` / ``flush()``).  Returns the
+    store directory so the caller can reopen a fresh ``LogFileKV`` on the
+    survivor state.  The caller must abandon the old store *and* any
+    manager built on it — their in-memory state did not survive.
+    """
+    with store._lock:
+        synced = store._synced_size
+        store._fh.close()
+        store._rfh.close()
+        with open(store.log_path, "r+b") as f:
+            f.truncate(synced)
+            f.flush()
+            os.fsync(f.fileno())
+    return store.dir
+
+
+def reopen(directory: str) -> LogFileKV:
+    """Fresh store on the post-crash disk image."""
+    return LogFileKV(directory)

@@ -4,7 +4,10 @@
   any time point (the paper's core claim);
 * delta algebra: apply∘diff = identity, inverse roundtrip;
 * bitmap pack/unpack/indices roundtrips;
-* multipoint ≡ singlepoint.
+* multipoint ≡ singlepoint;
+* epoch lifecycle: random acquire/publish/release interleavings never
+  reclaim a referenced epoch, never serve a torn read, and drain to
+  zero refs.
 """
 import numpy as np
 import pytest
@@ -107,3 +110,68 @@ def test_incremental_append_equivalence(n, seed, cut):
         truth = replay(uni, ev, t)
         got = gm.dg.get_snapshot(t, opts, pool=gm.pool)
         assert truth.equal(got), t
+
+
+# epoch lifecycle: ops are (kind, arg) drawn from a small alphabet and
+# interpreted against a model; pins are addressed by the index of the
+# acquire op that created them, so shrinking stays meaningful.
+_epoch_ops = st.lists(
+    st.one_of(
+        st.just(("acquire", 0)),
+        st.builds(lambda i: ("release", i), st.integers(0, 40)),
+        st.just(("publish", 0)),
+    ),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_epoch_ops)
+def test_epoch_lifecycle_invariants(ops):
+    from repro.core.epoch import EpochData, EpochRegistry
+
+    reclaimed: list[int] = []
+    reg = EpochRegistry(EpochData(dg="v0", n_events=0))
+    pins: list = []           # all acquired pins, released or not
+    live: list = []           # indices into pins still holding a ref
+    last_seen_id = -1
+    version_of: dict[int, str] = {0: "v0"}
+
+    for kind, arg in ops:
+        if kind == "acquire":
+            pin = reg.acquire()
+            # never a torn read: the pinned data is exactly what was
+            # published under that id
+            assert pin.data.dg == version_of[pin.id]
+            # monotonic: never handed an id older than one already seen
+            assert pin.id >= last_seen_id
+            last_seen_id = pin.id
+            live.append(len(pins))
+            pins.append(pin)
+        elif kind == "release" and live:
+            idx = live.pop(arg % len(live))
+            pins[idx].release()
+            pins[idx].release()        # idempotent
+        elif kind == "publish":
+            nid = reg.current_id + 1
+            version_of[nid] = f"v{nid}"
+            old = reg.current_id
+            reg.publish(EpochData(dg=version_of[nid], n_events=nid),
+                        reclaims=[lambda e=old: reclaimed.append(e)])
+            assert reg.current_id == nid
+        # a reclaimed epoch must have no live pin on it or anything older
+        if reclaimed:
+            newest_reclaimed = max(reclaimed)
+            for idx in live:
+                assert pins[idx].id > newest_reclaimed, \
+                    "reclaimed an epoch a live pin could still reach"
+        # reclaims run in publish order, exactly once
+        assert reclaimed == sorted(reclaimed)
+        assert len(reclaimed) == len(set(reclaimed))
+
+    for idx in live:
+        pins[idx].release()
+    st_ = reg.stats()
+    assert st_["current_refs"] == 0
+    assert st_["retired_pending"] == 0
+    # after every pin drains, every superseded epoch was reclaimed
+    assert reclaimed == list(range(reg.current_id))

@@ -1,0 +1,182 @@
+"""Writer/reader concurrency stress for the ingest pipeline.
+
+One writer thread streams pre-generated events through the threaded
+:class:`IngestPipeline` (small ``L`` so leaf rollovers and red/green
+skeleton swaps fire continuously) while N reader threads issue
+``Q.at`` / ``Q.between`` documents.  Every result must be **bit-identical**
+to a replay oracle evaluated at the reader's pinned epoch — the
+``epoch_events`` stat names the exact group-aligned event prefix the
+query was answered against, so the oracle is ``replay(uni, ev[:ne], t)``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.events import (EV_NEW_EDGE, EV_NEW_NODE, EV_TRANS_EDGE,
+                               EV_TRANS_NODE, replay)
+from repro.core.ingest import IngestPipeline
+from repro.core.manager import GraphManager
+from repro.api.document import Q
+from repro.data.generators import random_history
+
+N_BUILD = 100
+N_TOTAL = 1200
+L = 48
+N_READERS = 4
+ATTRS = "+node:all+edge:all"
+
+
+def _interval_oracle(ev, ne: int, ts: int, te: int) -> dict:
+    sub = ev[:ne]
+    m = (sub.time >= ts) & (sub.time < te)
+    tr = m & np.isin(sub.etype, (EV_TRANS_EDGE, EV_TRANS_NODE))
+    return {
+        "node_added": np.unique(
+            sub.slot[m & (sub.etype == EV_NEW_NODE)]).astype(np.int32),
+        "edge_added": np.unique(
+            sub.slot[m & (sub.etype == EV_NEW_EDGE)]).astype(np.int32),
+        "transient": sorted(zip(sub.time[tr].tolist(),
+                                sub.slot[tr].tolist())),
+    }
+
+
+def _check_state(got, want, tag) -> str | None:
+    if not (np.array_equal(got.node_mask, want.node_mask)
+            and np.array_equal(got.edge_mask, want.edge_mask)):
+        return f"{tag}: mask mismatch"
+    if not (np.allclose(got.node_attrs, want.node_attrs, equal_nan=True)
+            and np.allclose(got.edge_attrs, want.edge_attrs,
+                            equal_nan=True)):
+        return f"{tag}: attr mismatch"
+    return None
+
+
+def test_readers_see_consistent_epochs_during_ingest():
+    uni, ev = random_history(N_TOTAL, 41)
+    gm = GraphManager(uni, ev[:N_BUILD], L=L, k=2)
+    pipe = IngestPipeline(gm, group_events=32, group_window_s=0.002,
+                          threaded=True)
+    gm._ingest = pipe
+    svc = gm.query
+    tmax = int(ev.time.max()) + 2
+
+    errors: list[str] = []
+    checks = [0] * N_READERS
+    stop = threading.Event()
+
+    def point_reader(idx: int) -> None:
+        rng = np.random.default_rng(100 + idx)
+        while not stop.is_set():
+            ts = sorted({int(t) for t in rng.integers(0, tmax, size=3)})
+            r = svc.run(Q.at(ts).attrs(ATTRS).build() if len(ts) > 1
+                        else Q.at(ts[0]).attrs(ATTRS).build())
+            ne = r.stats["epoch_events"]
+            states = r.value if isinstance(r.value, dict) else {ts[0]: r.value}
+            for t, got in states.items():
+                err = _check_state(got, replay(uni, ev[:ne], int(t)),
+                                   f"point t={t} ne={ne}")
+                if err:
+                    errors.append(err)
+            checks[idx] += 1
+
+    def interval_reader(idx: int) -> None:
+        rng = np.random.default_rng(200 + idx)
+        while not stop.is_set():
+            a, b = sorted(int(t) for t in rng.integers(0, tmax, size=2))
+            r = svc.run(Q.between(a, b + 1).build())
+            ne = r.stats["epoch_events"]
+            want = _interval_oracle(ev, ne, a, b + 1)
+            got = r.value
+            if not (np.array_equal(got["node_added"], want["node_added"])
+                    and np.array_equal(got["edge_added"],
+                                       want["edge_added"])):
+                errors.append(f"interval [{a},{b + 1}) ne={ne}: adds")
+            got_tr = sorted(zip(got["transient_time"].tolist(),
+                                got["transient_slot"].tolist()))
+            if got_tr != want["transient"]:
+                errors.append(f"interval [{a},{b + 1}) ne={ne}: transients")
+            checks[idx] += 1
+
+    readers = ([threading.Thread(target=point_reader, args=(i,))
+                for i in range(N_READERS // 2)]
+               + [threading.Thread(target=interval_reader, args=(i,))
+                  for i in range(N_READERS // 2, N_READERS)])
+    for r in readers:
+        r.start()
+    try:
+        rng = np.random.default_rng(0)
+        i = N_BUILD
+        while i < N_TOTAL:
+            j = min(N_TOTAL, i + int(rng.integers(5, 40)))
+            pipe.submit(ev[i:j])
+            i = j
+            time.sleep(0.001)       # let readers interleave with commits
+        pipe.drain(timeout=60)
+    finally:
+        stop.set()
+        for r in readers:
+            r.join(timeout=30)
+
+    assert not errors, errors[:10]
+    assert all(c > 0 for c in checks), checks
+    assert pipe.rollovers > 0, "stress run never exercised a rollover"
+    # every reader pin released; every superseded epoch reclaimed
+    est = gm.epochs.stats()
+    assert est["current_refs"] == 0 and est["retired_pending"] == 0, est
+    # final state identical to a crash-free offline build
+    final = svc.run(Q.at(tmax - 1).attrs(ATTRS).build())
+    assert final.stats["epoch_events"] == N_TOTAL
+    err = _check_state(final.value, replay(uni, ev, tmax - 1), "final")
+    assert err is None, err
+    gm.close()
+
+
+def test_forced_rollover_storm_with_batches():
+    """Tiny leaves + explicit rollover calls racing a batch reader:
+    grouped ``run_batch`` documents must share one pinned epoch."""
+    uni, ev = random_history(700, 43)
+    gm = GraphManager(uni, ev[:N_BUILD], L=24, k=2)
+    pipe = IngestPipeline(gm, group_events=16, threaded=False)
+    gm._ingest = pipe
+    svc = gm.query
+    tmax = int(ev.time.max()) + 2
+
+    errors: list[str] = []
+    stop = threading.Event()
+
+    def reader() -> None:
+        rng = np.random.default_rng(7)
+        while not stop.is_set():
+            ts = sorted({int(t) for t in rng.integers(0, tmax, size=4)})
+            docs = [Q.at(t).attrs(ATTRS).build() for t in ts]
+            results = svc.run_batch(docs)
+            # all grouped docs report the same epoch
+            eids = {r.stats["epoch"] for r in results}
+            if len(eids) != 1:
+                errors.append(f"batch spanned epochs {eids}")
+            for t, r in zip(ts, results):
+                ne = r.stats["epoch_events"]
+                err = _check_state(r.value, replay(uni, ev[:ne], t),
+                                   f"batch t={t} ne={ne}")
+                if err:
+                    errors.append(err)
+
+    th = threading.Thread(target=reader)
+    th.start()
+    try:
+        rng = np.random.default_rng(1)
+        i = N_BUILD
+        while i < 700:
+            j = min(700, i + int(rng.integers(3, 30)))
+            pipe.append(ev[i:j])
+            i = j
+    finally:
+        stop.set()
+        th.join(timeout=30)
+
+    assert not errors, errors[:10]
+    assert pipe.rollovers >= 5
+    gm.close()

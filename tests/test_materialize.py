@@ -146,6 +146,34 @@ def test_cache_invalidated_by_live_update():
     assert np.array_equal(after.edge_mask, truth.edge_mask)
 
 
+def test_cache_invalidation_is_scoped_to_affected_times():
+    """Regression pin: an append at time tmin must drop only cached
+    entries at ``t >= tmin`` — results strictly before the append are
+    unaffected and must survive as hits (the old coarse rule dropped
+    every CURRENT-crossing entry on any update)."""
+    uni, ev = churn_network(n_initial_edges=100, n_events=1500, seed=5)
+    cut = len(ev) - 120
+    gm = GraphManager(uni, ev[:cut], L=64, k=2)
+    tmin = int(ev.time[cut])                     # first appended timestamp
+    t_old = tmin - 1                             # strictly before the append
+    t_new = int(ev.time[cut - 1])                # at/after the append window
+    gm.get_snapshot(t_old, "+node:all")
+    gm.get_snapshot(t_new, "+node:all")
+    h0 = gm.cache.hits
+    gm.update(ev[cut:])
+    # the pre-append entry survived and still answers correctly
+    s_old = gm.get_snapshot(t_old, "+node:all")
+    assert gm.cache.hits == h0 + 1, \
+        "append invalidated a cache entry it could not have affected"
+    truth_old = replay(uni, ev, t_old)
+    assert np.array_equal(s_old.node_mask, truth_old.node_mask)
+    # the overlapping entry was dropped and recomputes correctly
+    s_new = gm.get_snapshot(t_new, "+node:all")
+    truth_new = replay(uni, ev, t_new)
+    assert np.array_equal(s_new.node_mask, truth_new.node_mask)
+    assert np.array_equal(s_new.edge_mask, truth_new.edge_mask)
+
+
 # ------------------------------------------------- advised == cold property
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
