@@ -4,7 +4,11 @@ checkpoint/resume fault tolerance.
 
 The task: node classification where the label is whether a node's degree
 will grow in the future (a simple self-supervised temporal target), trained
-across a stream of snapshots drawn uniformly from the network's history.
+across a stream of snapshot windows served by
+:class:`repro.core.SnapshotBatchLoader` — interval retrieval runs on the
+batched device path (double-buffered prefix-chain sweep) and the degree
+features come from the fused delta-apply analytics kernel, so the training
+loop never replays events or scatters degrees on the host.
 
 Run:  PYTHONPATH=src python examples/temporal_gnn_train.py [--steps 300]
 """
@@ -16,9 +20,8 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import GraphManager, replay
+from repro.core import GraphManager, SnapshotBatchLoader
 from repro.data.generators import churn_network
 from repro.models import common as mc
 from repro.models.gnn import GCNConfig, gnn_loss, gnn_param_defs
@@ -28,36 +31,19 @@ from repro.training.optim import OPTIMIZERS
 from repro.training.trainer import make_train_step
 
 
-def snapshot_batch(gm, uni, ev, t_now, t_future, d_in=16):
-    """Features: random projection of node id + degree; labels: degree growth."""
-    st = replay(uni, ev, t_now)
-    fut = replay(uni, ev, t_future)
-    N = uni.num_nodes
-    deg = np.zeros(N, np.float32)
-    eid = np.nonzero(st.edge_mask)[0]
-    np.add.at(deg, uni.edge_src[eid], 1)
-    np.add.at(deg, uni.edge_dst[eid], 1)
-    fdeg = np.zeros(N, np.float32)
-    eid2 = np.nonzero(fut.edge_mask)[0]
-    np.add.at(fdeg, uni.edge_src[eid2], 1)
-    np.add.at(fdeg, uni.edge_dst[eid2], 1)
-    rng = np.random.default_rng(0)
-    proj = rng.standard_normal((1, d_in - 1)).astype(np.float32)
-    x = np.concatenate([deg[:, None] * proj * 0.1, deg[:, None]], 1)
-    labels = (fdeg > deg).astype(np.int32)
-    src = uni.edge_src[eid]
-    dst = uni.edge_dst[eid]
-    ei = np.stack([np.concatenate([src, dst]), np.concatenate([dst, src])])
-    # pad edges to a static size for jit
-    E_pad = uni.num_edges * 2
-    ei_p = np.zeros((2, E_pad), np.int32)
-    ei_p[:, : ei.shape[1]] = ei
-    em = np.zeros(E_pad, np.float32)
-    em[: ei.shape[1]] = 1.0
-    return {"x": jnp.asarray(x), "edge_index": jnp.asarray(ei_p),
-            "edge_mask": jnp.asarray(em),
-            "labels": jnp.asarray(labels),
-            "label_mask": jnp.asarray(st.node_mask.astype(np.float32))}
+def snapshot_stream(loader: SnapshotBatchLoader):
+    """Endless per-snapshot training examples from windowed loader batches.
+
+    The loader yields ``[T, ...]`` window stacks (one batched retrieval +
+    one fused analytics pass per window); each timepoint slice is a
+    static-shape batch for the jit'd train step."""
+    while True:
+        for b in loader:
+            for j in range(len(b["times"])):
+                yield {"x": b["x"][j], "edge_index": b["edge_index"],
+                       "edge_mask": b["edge_mask"][j],
+                       "labels": b["labels"][j],
+                       "label_mask": b["label_mask"][j]}
 
 
 def main():
@@ -89,18 +75,21 @@ def main():
     except (FileNotFoundError, KeyError):
         pass
 
-    rng = np.random.default_rng(1)
+    lo, hi = tmax // 4, int(tmax * 0.8)
+    grid = sorted({int(t) for t in
+                   np.linspace(lo, hi, 64)})
+    loader = SnapshotBatchLoader(gm, grid, batch_size=4,
+                                 label_horizon=tmax // 10, d_in=cfg.d_in)
+    stream = snapshot_stream(loader)
     t0 = time.time()
     for step in range(start, args.steps):
-        t_now = int(rng.integers(tmax // 4, int(tmax * 0.8)))
-        batch = snapshot_batch(gm, uni, ev, t_now, t_now + tmax // 10)
+        batch = next(stream)
         params, opt_state, m = step_fn(params, opt_state, batch)
         if (step + 1) % 50 == 0:
             print(f"step {step+1:4d} loss {float(m['loss']):.4f} "
                   f"({(time.time()-t0)/(step-start+1)*1000:.0f} ms/step)")
         if (step + 1) % args.ckpt_every == 0:
-            save_checkpoint(store, step + 1, (params, opt_state),
-                            extra={"rng": int(rng.integers(1 << 30))})
+            save_checkpoint(store, step + 1, (params, opt_state))
             print(f"  checkpointed @ {step+1}")
     save_checkpoint(store, args.steps, (params, opt_state))
     print("done — final loss", float(m["loss"]))

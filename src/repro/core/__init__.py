@@ -23,4 +23,4 @@ from .materialize import (Advice, AdvisorConfig, MaterializationAdvisor,  # noqa
                           SnapshotCache, WorkloadStats)
 from .query import AttrOptions, TimeExpression, parse_attr_options  # noqa: F401
 from .temporal import (EvolveOp, EvolveResult, PregelFold,  # noqa: F401
-                       StepDelta, TemporalEngine)
+                       SnapshotBatchLoader, StepDelta, TemporalEngine)

@@ -553,3 +553,126 @@ class TemporalEngine:
                  "wall_s": wall,
                  "solver_iters": iters if iters[0] is not None else None}
         return EvolveResult(list(times), values, stats)
+
+
+# ---------------------------------------------------------------------------
+# snapshot batch streaming (training workloads)
+# ---------------------------------------------------------------------------
+
+
+class SnapshotBatchLoader:
+    """Streams windows of interval snapshots as model-ready batches.
+
+    Each batch covers ``batch_size`` consecutive timepoints of ``times``.
+    The masks come from the batched device path
+    (:func:`repro.runtime.jax_exec.evolve_intervals_jax`: one Steiner
+    retrieval for the window start, then the double-buffered prefix-chain
+    sweep), and per-node degree features come from the fused analytics
+    kernel — the unpacked live-edge indicator it emits is reduced by the
+    segment_sum kernel, so features never take a numpy scatter pass.
+
+    Batch dict (all jnp, static shapes across batches — jit-stable):
+
+    * ``x           [T, N, d_in] f32`` — degree features (random
+      projection of degree + raw degree, matching the GNN example),
+    * ``edge_index  [2, 2E] i32``     — every universe edge, both
+      directions (liveness is carried by the mask, not by selection),
+    * ``edge_mask   [T, 2E] f32``,
+    * ``label_mask  [T, N]  f32``     — live nodes at each timepoint,
+    * ``labels      [T, N]  i32``     — degree growth at
+      ``t + label_horizon`` (only with a horizon),
+    * ``num_edges   [T]     i32``     — fused popcount totals,
+    * ``times       list[int]``.
+
+    The last window is dropped if shorter than ``batch_size`` (static
+    shapes); with ``label_horizon`` the horizon snapshots retrieve in the
+    same batched device call as the window itself.
+    """
+
+    def __init__(self, gm, times: Sequence[int], *, batch_size: int = 4,
+                 label_horizon: int | None = None, d_in: int = 16,
+                 seed: int = 0, impl: str | None = None) -> None:
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.gm = gm
+        self.times = sorted(dict.fromkeys(int(t) for t in times))
+        self.batch_size = int(batch_size)
+        self.label_horizon = (None if label_horizon is None
+                              else int(label_horizon))
+        self.d_in = int(d_in)
+        self.impl = impl
+        rng = np.random.default_rng(seed)
+        self._proj = rng.standard_normal((1, self.d_in - 1)).astype(
+            np.float32)
+        uni = gm.universe
+        E = uni.num_edges
+        src, dst = uni.edge_src[:E], uni.edge_dst[:E]
+        self._edge_index = np.stack(
+            [np.concatenate([src, dst]), np.concatenate([dst, src])]
+        ).astype(np.int32)
+
+    def __len__(self) -> int:
+        return len(self.times) // self.batch_size
+
+    def _degrees(self, edge_masks: list[np.ndarray]):
+        """Fused-kernel analytics over the window's edge planes: one K=0
+        batched fused call lands popcounts + the live indicator, then the
+        segment_sum kernel reduces per-node degrees on device."""
+        import jax.numpy as jnp
+        from .bitmaps import np_pack
+        from ..kernels import delta_apply_fused_batched, segment_sum
+        uni = self.gm.universe
+        E, N = uni.num_edges, uni.num_nodes
+        bases = np.stack([np_pack(em) for em in edge_masks])
+        T, W = bases.shape
+        fe = delta_apply_fused_batched(
+            jnp.asarray(bases), jnp.zeros((T, 0, W), jnp.uint32),
+            jnp.zeros((T, 0, W), jnp.uint32), impl=self.impl)
+        src = jnp.asarray(uni.edge_src[:E])
+        dst = jnp.asarray(uni.edge_dst[:E])
+        deg = np.stack([
+            np.asarray(segment_sum(fe.live[t, :E][:, None], src, N,
+                                   impl=self.impl)
+                       + segment_sum(fe.live[t, :E][:, None], dst, N,
+                                     impl=self.impl)).reshape(-1)
+            for t in range(T)])
+        return deg.astype(np.float32), fe.live_count().astype(np.int32)
+
+    def __iter__(self):
+        import jax.numpy as jnp
+        from ..runtime.jax_exec import evolve_intervals_jax
+        gm, bs, hz = self.gm, self.batch_size, self.label_horizon
+        for i in range(len(self)):
+            window = self.times[i * bs:(i + 1) * bs]
+            intervals = [window]
+            if hz is not None:
+                intervals.append(sorted({t + hz for t in window}))
+            res = evolve_intervals_jax(gm.dg, intervals, impl=self.impl,
+                                       pool=gm.pool,
+                                       prefetch=gm.prefetcher)
+            masks = res[0]
+            node_masks = [masks[t][0] for t in window]
+            deg, num_edges = self._degrees([masks[t][1] for t in window])
+            x = np.concatenate(
+                [deg[:, :, None] * self._proj[None] * 0.1,
+                 deg[:, :, None]], axis=2)
+            # edge liveness, both directions (edge_index order)
+            live = np.stack([masks[t][1].astype(np.float32)
+                             for t in window])
+            em = np.concatenate([live, live], axis=1)
+            batch = {
+                "x": jnp.asarray(x),
+                "edge_index": jnp.asarray(self._edge_index),
+                "edge_mask": jnp.asarray(em),
+                "label_mask": jnp.asarray(
+                    np.stack(node_masks).astype(np.float32)),
+                "num_edges": jnp.asarray(num_edges),
+                "times": list(window),
+            }
+            if hz is not None:
+                fmasks = res[1]
+                fdeg, _ = self._degrees(
+                    [fmasks[t + hz][1] for t in window])
+                batch["labels"] = jnp.asarray(
+                    (fdeg > deg).astype(np.int32))
+            yield batch

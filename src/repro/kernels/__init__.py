@@ -2,12 +2,15 @@
 
 Each kernel directory has: the pallas_call + BlockSpec implementation,
 ``ops.py`` (jit'd wrapper with impl switch), ``ref.py`` (pure-jnp oracle).
-On this CPU container kernels run with ``interpret=True``; ``impl='xla'``
-variants are what the dry-run lowers (keeps FLOPs visible to
-cost_analysis for the roofline).
+``impl``/``interpret`` default to the process-wide policy in
+:mod:`repro.kernels.policy` (``REPRO_KERNEL=pallas|xla`` env override,
+else Pallas compiled on TPU and XLA elsewhere; interpret mode auto-selects
+off-TPU so the CPU test container exercises kernel bodies unchanged).
 """
-from .delta_apply import (delta_apply_chain, delta_apply_chain_batched,  # noqa: F401
-                          delta_apply_chain_prefix,
-                          delta_apply_chain_prefix_batched)
+from . import policy  # noqa: F401
+from .delta_apply import (FusedOut, delta_apply_chain,  # noqa: F401
+                          delta_apply_chain_batched, delta_apply_chain_prefix,
+                          delta_apply_chain_prefix_batched, delta_apply_fused,
+                          delta_apply_fused_batched)
 from .flash_attention import attention  # noqa: F401
 from .segment_sum import bucket_edges, segment_sum  # noqa: F401

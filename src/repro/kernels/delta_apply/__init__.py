@@ -1,3 +1,5 @@
-from .ops import (delta_apply_chain, delta_apply_chain_batched,  # noqa: F401
-                  delta_apply_chain_prefix, delta_apply_chain_prefix_batched,
-                  delta_apply_chain_ref)
+from .ops import (FusedOut, delta_apply_chain,  # noqa: F401
+                  delta_apply_chain_batched, delta_apply_chain_prefix,
+                  delta_apply_chain_prefix_batched, delta_apply_chain_ref,
+                  delta_apply_fused, delta_apply_fused_batched)
+from .ref import delta_apply_fused_ref  # noqa: F401

@@ -55,3 +55,111 @@ def delta_apply_chain_pallas(base: jnp.ndarray, adds: jnp.ndarray,
         interpret=interpret,
     )(base, adds, dels)
     return out[:W]
+
+
+# ---------------------------------------------------------------------------
+# fused chain + push-style analytics
+# ---------------------------------------------------------------------------
+#
+# The retrieval hot loop ends with analytics over the landed bitmap —
+# live-element counts (density), per-node degrees, PageRank push mass.
+# Done separately that is a *second* full sweep over the mask (plus an
+# unpack pass to feed segment_sum).  The fused kernel emits them while the
+# final chain state is still in registers:
+#
+#   mask   [W]  u32  — the landed chain state (same as the plain kernel)
+#   pop    [G]  i32  — per-grid-block popcount partials (Σ = live count)
+#   accw   [W]  f32  — per-word weighted partials: word w's bits dotted
+#                      with its 32 slot weights (Σ = PageRank push mass)
+#   live   [W*32] f32 — the unpacked membership indicator, the feed for
+#                      the segment_sum kernel's per-node degree reduction
+#
+# accw partials are per *word* (32-element dot, fixed evaluation order) so
+# the Pallas and XLA paths reduce identical element groups — the full
+# reduction happens once, downstream, on identical inputs: fused analytics
+# stay bit-identical to the ref oracle even in float32.
+
+
+def _unpack_bits_f32(m: jnp.ndarray) -> jnp.ndarray:
+    """[bw] u32 -> [bw, 32] f32 bit indicators (little-endian bit order)."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (m.shape[0], 32), 1)
+    return ((m[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+
+
+def _fused_kernel(base_ref, adds_ref, dels_ref, w_ref, out_ref, pop_ref,
+                  accw_ref, live_ref, *, K: int, emit_live: bool,
+                  has_weights: bool):
+    m = base_ref[...]
+    for i in range(K):
+        m = (m & ~dels_ref[i, :]) | adds_ref[i, :]
+    out_ref[...] = m
+    pop_ref[0] = jax.lax.population_count(m).astype(jnp.int32).sum()
+    bits = _unpack_bits_f32(m)                     # [bw, 32]
+    if has_weights:
+        w = w_ref[...].reshape(m.shape[0], 32)
+        accw_ref[...] = (bits * w).sum(axis=1)     # per-word partials
+    else:
+        accw_ref[...] = bits.sum(axis=1)           # per-word popcount (f32)
+    if emit_live:
+        live_ref[...] = bits.reshape(-1)
+    else:
+        live_ref[...] = jnp.zeros_like(live_ref[...])   # dummy block
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_w", "interpret", "emit_live"))
+def delta_apply_fused_pallas(base: jnp.ndarray, adds: jnp.ndarray,
+                             dels: jnp.ndarray,
+                             weights: jnp.ndarray | None = None, *,
+                             block_w: int = 1024, interpret: bool = True,
+                             emit_live: bool = True):
+    """One pass over each bitmap block: land the K-delta chain *and* emit
+    the analytics partials.  ``base [W] u32``, ``adds/dels [K, W] u32``,
+    ``weights [W*32] f32`` (optional per-slot weights, e.g. PageRank
+    contributions).  ``W`` must already be a multiple of ``block_w``
+    (the ops-layer wrapper pads once, so partials line up across impls).
+
+    Returns ``(mask [W] u32, pop [G] i32, accw [W] f32,
+    live [W*32] f32 | None)``.
+    """
+    K, W = adds.shape
+    assert W % block_w == 0, "ops wrapper pads W to the block size"
+    if K == 0:   # an all-zero (add, del) row is the identity step
+        adds = jnp.zeros((1, W), jnp.uint32)
+        dels = jnp.zeros((1, W), jnp.uint32)
+        K = 1
+    G = W // block_w
+    has_weights = weights is not None
+    if not has_weights:
+        weights = jnp.zeros((1,), jnp.float32)   # dummy; kernel ignores it
+        w_spec = pl.BlockSpec((1,), lambda i: (0,))
+    else:
+        w_spec = pl.BlockSpec((block_w * 32,), lambda i: (i,))
+    out_shapes = [
+        jax.ShapeDtypeStruct((W,), jnp.uint32),
+        jax.ShapeDtypeStruct((G,), jnp.int32),
+        jax.ShapeDtypeStruct((W,), jnp.float32),
+        jax.ShapeDtypeStruct((W * 32 if emit_live else 32,), jnp.float32),
+    ]
+    out_specs = [
+        pl.BlockSpec((block_w,), lambda i: (i,)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((block_w,), lambda i: (i,)),
+        (pl.BlockSpec((block_w * 32,), lambda i: (i,)) if emit_live
+         else pl.BlockSpec((32,), lambda i: (0,))),
+    ]
+    mask, pop, accw, live = pl.pallas_call(
+        functools.partial(_fused_kernel, K=K, emit_live=emit_live,
+                          has_weights=has_weights),
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+            pl.BlockSpec((K, block_w), lambda i: (0, i)),
+            pl.BlockSpec((K, block_w), lambda i: (0, i)),
+            w_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(base, adds, dels, weights)
+    return mask, pop, accw, (live if emit_live else None)

@@ -1,17 +1,26 @@
-"""Public jit'd wrapper for fused delta-chain application.
+"""Public jit'd wrappers for fused delta-chain application + analytics.
 
-On CPU containers the Pallas TPU kernel runs in ``interpret=True`` mode
-(used by tests); production TPU deployments pass ``interpret=False``.
-``impl='xla'`` selects the pure-jnp scan (used under `jit` in the
-snapshot-retrieval engine, and as the oracle).
+``impl``/``interpret`` default to the process-wide policy
+(:mod:`repro.kernels.policy`): ``REPRO_KERNEL=pallas|xla`` or backend
+detection (Pallas compiled on TPU, XLA elsewhere; interpret mode only
+ever auto-selected off-TPU).  Callers no longer thread kernel flags —
+explicit arguments remain as overrides for tests and benchmarks.
 """
 from __future__ import annotations
+
+import functools
+from collections import Counter
+from typing import NamedTuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from .delta_apply import delta_apply_chain_pallas
-from .ref import delta_apply_chain_prefix_ref, delta_apply_chain_ref
+from .. import policy
+from .delta_apply import delta_apply_chain_pallas, delta_apply_fused_pallas
+from .ref import (delta_apply_chain_prefix_ref, delta_apply_chain_ref,
+                  delta_apply_fused_ref)
 
 # Shape bucketing for the jit'd XLA paths: chain calls arrive with
 # arbitrary (B, K, W) — every distinct shape would otherwise compile its
@@ -21,6 +30,15 @@ from .ref import delta_apply_chain_prefix_ref, delta_apply_chain_ref
 # lane multiple collapses the shape space to a handful of buckets that
 # stay hot in the compile cache.
 _W_ALIGN = 128
+
+# Retraces per entry point (a trace == a compile for these jits): the
+# bucketing above bounds it to O(log) distinct shapes per entry — pinned
+# by tests/test_kernels.py::test_recompile_counts_bounded.
+trace_counts: Counter = Counter()
+
+
+def reset_trace_counts() -> None:
+    trace_counts.clear()
 
 
 def _bucket(n: int) -> int:
@@ -36,14 +54,25 @@ def _pad_axis(a: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
     return jnp.pad(a, widths)
 
 
-_chain_jit = jax.jit(delta_apply_chain_ref)
-_chain_batched_jit = jax.jit(jax.vmap(delta_apply_chain_ref))
-_chain_prefix_batched_jit = jax.jit(jax.vmap(delta_apply_chain_prefix_ref))
+def _counted(name: str, fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        trace_counts[name] += 1          # runs at trace time only
+        return fn(*args, **kwargs)
+    return wrapper
+
+
+_chain_jit = jax.jit(_counted("chain", delta_apply_chain_ref))
+_chain_batched_jit = jax.jit(
+    _counted("chain_batched", jax.vmap(delta_apply_chain_ref)))
+_chain_prefix_batched_jit = jax.jit(
+    _counted("chain_prefix_batched", jax.vmap(delta_apply_chain_prefix_ref)))
 
 
 def delta_apply_chain(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray,
-                      *, impl: str = "xla", block_w: int = 1024,
-                      interpret: bool = True) -> jnp.ndarray:
+                      *, impl: str | None = None, block_w: int = 1024,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    impl, interpret = policy.resolve(impl, interpret)
     if impl == "xla":
         W = base.shape[0]
         Wp = -(-W // _W_ALIGN) * _W_ALIGN
@@ -52,16 +81,14 @@ def delta_apply_chain(base: jnp.ndarray, adds: jnp.ndarray, dels: jnp.ndarray,
                          _pad_axis(_pad_axis(adds, 1, Wp), 0, Kp),
                          _pad_axis(_pad_axis(dels, 1, Wp), 0, Kp))
         return out[:W]
-    if impl == "pallas":
-        return delta_apply_chain_pallas(base, adds, dels, block_w=block_w,
-                                        interpret=interpret)
-    raise ValueError(f"unknown impl {impl!r}")
+    return delta_apply_chain_pallas(base, adds, dels, block_w=block_w,
+                                    interpret=interpret)
 
 
 def delta_apply_chain_batched(bases: jnp.ndarray, adds: jnp.ndarray,
-                              dels: jnp.ndarray, *, impl: str = "xla",
+                              dels: jnp.ndarray, *, impl: str | None = None,
                               block_w: int = 1024,
-                              interpret: bool = True) -> jnp.ndarray:
+                              interpret: bool | None = None) -> jnp.ndarray:
     """Vmapped multi-snapshot apply: ``B`` sibling chains in one call.
 
     ``bases [B, W]``, ``adds/dels [B, K, W]`` (chains zero-padded to a
@@ -70,6 +97,7 @@ def delta_apply_chain_batched(bases: jnp.ndarray, adds: jnp.ndarray,
     kernel launch and one sweep over the stacked bit-planes instead of
     ``B`` sequential chain calls.
     """
+    impl, interpret = policy.resolve(impl, interpret)
     if impl == "xla":
         B, K, W = adds.shape
         Wp = -(-W // _W_ALIGN) * _W_ALIGN
@@ -79,10 +107,8 @@ def delta_apply_chain_batched(bases: jnp.ndarray, adds: jnp.ndarray,
             _pad_axis(_pad_axis(_pad_axis(adds, 2, Wp), 1, Kp), 0, Bp),
             _pad_axis(_pad_axis(_pad_axis(dels, 2, Wp), 1, Kp), 0, Bp))
         return out[:B, :W]
-    if impl == "pallas":
-        return jax.vmap(lambda b, a, d: delta_apply_chain_pallas(
-            b, a, d, block_w=block_w, interpret=interpret))(bases, adds, dels)
-    raise ValueError(f"unknown impl {impl!r}")
+    return jax.vmap(lambda b, a, d: delta_apply_chain_pallas(
+        b, a, d, block_w=block_w, interpret=interpret))(bases, adds, dels)
 
 
 def delta_apply_chain_prefix(base: jnp.ndarray, adds: jnp.ndarray,
@@ -109,3 +135,122 @@ def delta_apply_chain_prefix_batched(bases: jnp.ndarray, adds: jnp.ndarray,
         _pad_axis(_pad_axis(_pad_axis(adds, 2, Wp), 1, Kp), 0, Bp),
         _pad_axis(_pad_axis(_pad_axis(dels, 2, Wp), 1, Kp), 0, Bp))
     return out[:B, :K, :W]
+
+
+# ---------------------------------------------------------------------------
+# fused chain + analytics
+# ---------------------------------------------------------------------------
+
+
+class FusedOut(NamedTuple):
+    """Result of one fused delta-apply + analytics pass.
+
+    ``mask [.., W] u32`` is the landed chain state; ``pop [.., G] i32``
+    per-block popcount partials; ``accw [.., W] f32`` per-word weighted
+    partials; ``live [.., W*32] f32`` the unpacked membership indicator
+    (``None`` unless requested — it is the segment_sum degree feed).
+    Partials are identical across impls (fixed per-word/per-block
+    reduction groups), so the totals below are too.
+    """
+    mask: jnp.ndarray
+    pop: jnp.ndarray
+    accw: jnp.ndarray
+    live: jnp.ndarray | None
+
+    def live_count(self):
+        """Total live elements (int; summed over the trailing axis)."""
+        return np.asarray(self.pop).sum(axis=-1)
+
+    def weighted_total(self):
+        """Σ weights over live slots, f32 (PageRank push mass)."""
+        return np.asarray(self.accw, np.float32).sum(axis=-1,
+                                                     dtype=np.float32)
+
+
+_fused_xla_jit = jax.jit(_counted("fused", delta_apply_fused_ref),
+                         static_argnames=("block_w", "emit_live"))
+
+
+def _fused_batched_ref(bases, adds, dels, weights, *, block_w, emit_live):
+    return jax.vmap(
+        lambda b, a, d: delta_apply_fused_ref(
+            b, a, d, weights, block_w=block_w, emit_live=emit_live)
+    )(bases, adds, dels)
+
+
+_fused_batched_xla_jit = jax.jit(
+    _counted("fused_batched", _fused_batched_ref),
+    static_argnames=("block_w", "emit_live"))
+
+
+def _fused_pad(base, adds, dels, weights, block_w):
+    """Pad W to a block multiple and K to its bucket — once, identically,
+    for every impl, so partials line up bit-for-bit across impls."""
+    K, W = adds.shape[-2:]
+    Wp = -(-W // block_w) * block_w
+    Kp = _bucket(K)
+    base = _pad_axis(base, base.ndim - 1, Wp)
+    adds = _pad_axis(_pad_axis(adds, adds.ndim - 1, Wp), adds.ndim - 2, Kp)
+    dels = _pad_axis(_pad_axis(dels, dels.ndim - 1, Wp), dels.ndim - 2, Kp)
+    if weights is not None:
+        weights = _pad_axis(jnp.asarray(weights, jnp.float32), 0, Wp * 32)
+    return base, adds, dels, weights, W
+
+
+def delta_apply_fused(base: jnp.ndarray, adds: jnp.ndarray,
+                      dels: jnp.ndarray,
+                      weights: jnp.ndarray | None = None, *,
+                      impl: str | None = None, block_w: int = 1024,
+                      interpret: bool | None = None,
+                      emit_live: bool = True) -> FusedOut:
+    """Fused retrieval + analytics: land the K-delta chain over ``base``
+    and, in the same pass over each bitmap block, emit per-block popcount
+    partials, per-word weighted partials (``weights [W*32] f32``, e.g.
+    per-slot PageRank contributions) and the unpacked live indicator that
+    feeds the segment_sum kernel's per-node degree reduction.
+
+    ``pop``/``accw`` come back over the padded width (zero padding
+    contributes nothing); ``mask`` and ``live`` are trimmed to ``W``.
+    """
+    impl, interpret = policy.resolve(impl, interpret)
+    base, adds, dels, weights, W = _fused_pad(base, adds, dels, weights,
+                                              block_w)
+    if impl == "xla":
+        mask, pop, accw, live = _fused_xla_jit(
+            base, adds, dels, weights, block_w=block_w, emit_live=emit_live)
+    else:
+        mask, pop, accw, live = delta_apply_fused_pallas(
+            base, adds, dels, weights, block_w=block_w, interpret=interpret,
+            emit_live=emit_live)
+    return FusedOut(mask[:W], pop, accw[:W],
+                    live[:W * 32] if live is not None else None)
+
+
+def delta_apply_fused_batched(bases: jnp.ndarray, adds: jnp.ndarray,
+                              dels: jnp.ndarray,
+                              weights: jnp.ndarray | None = None, *,
+                              impl: str | None = None, block_w: int = 1024,
+                              interpret: bool | None = None,
+                              emit_live: bool = True) -> FusedOut:
+    """Batched fused apply+analytics: ``bases [B, W]``, ``adds/dels
+    [B, K, W]``, one shared ``weights [W*32]`` — B chains land and emit
+    their analytics partials in a single vmapped pass (B is bucketed;
+    padded rows are dropped from every output)."""
+    impl, interpret = policy.resolve(impl, interpret)
+    B = bases.shape[0]
+    bases, adds, dels, weights, W = _fused_pad(bases, adds, dels, weights,
+                                               block_w)
+    Bp = _bucket(B)
+    bases = _pad_axis(bases, 0, Bp)
+    adds = _pad_axis(adds, 0, Bp)
+    dels = _pad_axis(dels, 0, Bp)
+    if impl == "xla":
+        mask, pop, accw, live = _fused_batched_xla_jit(
+            bases, adds, dels, weights, block_w=block_w, emit_live=emit_live)
+    else:
+        mask, pop, accw, live = jax.vmap(
+            lambda b, a, d: delta_apply_fused_pallas(
+                b, a, d, weights, block_w=block_w, interpret=interpret,
+                emit_live=emit_live))(bases, adds, dels)
+    return FusedOut(mask[:B, :W], pop[:B], accw[:B, :W],
+                    live[:B, :W * 32] if live is not None else None)

@@ -26,6 +26,41 @@ def delta_apply_chain_ref(base: jnp.ndarray, adds: jnp.ndarray,
     return out
 
 
+def delta_apply_fused_ref(base: jnp.ndarray, adds: jnp.ndarray,
+                          dels: jnp.ndarray,
+                          weights: jnp.ndarray | None = None, *,
+                          block_w: int = 1024, emit_live: bool = True):
+    """Oracle for the fused chain + analytics kernel.
+
+    Inputs match :func:`delta_apply_chain_ref` plus optional per-slot
+    ``weights [W*32] f32``; ``W`` must be a multiple of ``block_w``
+    (the ops wrapper pads once for every impl).  Returns
+
+    * ``mask  [W] u32``    — the landed chain state,
+    * ``pop   [G] i32``    — per-block popcount partials,
+    * ``accw  [W] f32``    — per-word weighted partials (bits of word w
+      dotted with its 32 weights; plain per-word popcount when no
+      weights) — per-word grouping fixes the float reduction order, so
+      the Pallas kernel reproduces these bit-for-bit,
+    * ``live  [W*32] f32`` — unpacked membership (``None`` unless
+      ``emit_live``), the segment_sum degree-reduction feed.
+    """
+    m = delta_apply_chain_ref(base, adds, dels)
+    W = m.shape[0]
+    assert W % block_w == 0, "ops wrapper pads W to the block size"
+    G = W // block_w
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (W, 32), 1)
+    bits = ((m[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    pop = (jax.lax.population_count(m).astype(jnp.int32)
+           .reshape(G, block_w).sum(axis=1))
+    if weights is not None:
+        accw = (bits * weights.reshape(W, 32)).sum(axis=1)
+    else:
+        accw = bits.sum(axis=1)
+    live = bits.reshape(-1) if emit_live else None
+    return m, pop, accw, live
+
+
 def delta_apply_chain_prefix_ref(base: jnp.ndarray, adds: jnp.ndarray,
                                  dels: jnp.ndarray) -> jnp.ndarray:
     """Emit every intermediate state of the chain: ``out[i] = m_{i+1}``

@@ -24,6 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import policy
 from .flash_attention import flash_attention_pallas
 from .ref import attention_ref
 
@@ -159,8 +160,10 @@ def _chunked_gqa_attention(q, k, v, *, causal, window, q_offset, scale,
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               causal: bool = True, window: int | None = None,
               q_offset: int = 0, scale: float | None = None,
-              impl: str = "xla", block_k: int = 512,
-              interpret: bool = True) -> jnp.ndarray:
+              impl: str | None = None, block_k: int = 512,
+              interpret: bool | None = None) -> jnp.ndarray:
+    if impl != "ref":   # 'ref' is a test-only oracle, never policy-selected
+        impl, interpret = policy.resolve(impl, interpret)
     if impl == "ref":
         return attention_ref(q, k, v, causal=causal, window=window,
                              q_offset=q_offset, scale=scale)

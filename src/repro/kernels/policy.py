@@ -1,0 +1,63 @@
+"""Kernel implementation policy: impl / interpret resolved once, from env.
+
+Every kernel family (``delta_apply``, ``segment_sum``, ``flash_attention``)
+exposes ``impl=`` (``"pallas"`` | ``"xla"``) and, for the Pallas path,
+``interpret=``.  Before this module existed the entry points hardcoded
+``interpret=True`` (the CPU-container test default) and every caller
+threaded ``impl`` flags by hand — a production TPU deployment had to touch
+each call site.  The policy is now resolved in one place:
+
+* ``REPRO_KERNEL=pallas|xla`` pins the implementation for every kernel
+  entry point that is not explicitly overridden at the call site;
+* unset, the default is ``pallas`` on TPU backends and ``xla`` elsewhere
+  (CPU has no Mosaic compiler — the XLA path *is* the fast path there);
+* ``interpret`` (Pallas only) resolves to ``False`` exactly on TPU; any
+  other backend runs the kernel through the Pallas interpreter, which is
+  correct but slow — tests use it for parity, production never should.
+
+``REPRO_KERNEL_INTERPRET=0|1`` force-overrides interpret resolution (used
+by the parity suite to exercise both paths on one host).
+"""
+from __future__ import annotations
+
+import os
+
+VALID_IMPLS = ("pallas", "xla")
+
+
+def backend() -> str:
+    """The active JAX backend platform name (``cpu``/``tpu``/``gpu``)."""
+    import jax
+    return jax.default_backend()
+
+
+def default_impl() -> str:
+    """Policy default when neither the call site nor the env pins one."""
+    env = os.environ.get("REPRO_KERNEL", "").strip().lower()
+    if env:
+        if env not in VALID_IMPLS:
+            raise ValueError(
+                f"REPRO_KERNEL={env!r} invalid; choose from {VALID_IMPLS}")
+        return env
+    return "pallas" if backend() == "tpu" else "xla"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: real Mosaic compile only on TPU."""
+    env = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip()
+    if env:
+        return env not in ("0", "false", "False")
+    return backend() != "tpu"
+
+
+def resolve(impl: str | None = None, interpret: bool | None = None
+            ) -> tuple[str, bool]:
+    """Resolve ``(impl, interpret)``: explicit call-site values win, then
+    ``REPRO_KERNEL`` / ``REPRO_KERNEL_INTERPRET``, then backend detection."""
+    if impl is None:
+        impl = default_impl()
+    elif impl not in VALID_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; choose from {VALID_IMPLS}")
+    if interpret is None:
+        interpret = default_interpret()
+    return impl, bool(interpret)

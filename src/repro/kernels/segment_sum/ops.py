@@ -5,6 +5,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from .. import policy
 from .ref import segment_sum_ref
 from .segment_sum import segment_sum_bucketed
 
@@ -37,15 +38,18 @@ def bucket_edges(seg_ids: np.ndarray, num_segments: int, block_n: int
 
 
 def segment_sum(data: jnp.ndarray, seg_ids, num_segments: int, *,
-                impl: str = "xla", block_n: int = 128,
+                impl: str | None = None, block_n: int = 128,
                 buckets: tuple | None = None,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool | None = None) -> jnp.ndarray:
     """Segment sum with selectable implementation.
 
     impl='xla'    → jax.ops.segment_sum (scatter; lowering/roofline path)
     impl='pallas' → bucketed one-hot-matmul kernel; ``buckets`` may carry
                     precomputed ``bucket_edges`` output (static graphs).
+    impl=None     → resolved by :mod:`repro.kernels.policy` (REPRO_KERNEL
+                    env, else backend detection).
     """
+    impl, interpret = policy.resolve(impl, interpret)
     if impl == "xla":
         return segment_sum_ref(data, jnp.asarray(seg_ids), num_segments)
     if impl == "pallas":

@@ -79,10 +79,30 @@ class Prefetcher:
         store = self.store
 
         def _work():
+            self._install_nice()
             blobs = mget_optional(store, keys)
             return decode(blobs) if decode is not None else blobs
 
         return self._ensure_pool().submit(_work)
+
+    def submit_fn(self, fn, *args) -> "Future":
+        """Run an arbitrary callable on a prefetch worker (with the
+        cooperative decode-yield installed).  The device pipeline uses this
+        to build the *next* host-side plane chunk while the current chunk's
+        kernels run."""
+        def _work():
+            self._install_nice()
+            return fn(*args)
+
+        return self._ensure_pool().submit(_work)
+
+    @staticmethod
+    def _install_nice() -> None:
+        # Idempotent per worker thread: between-array decode yields keep
+        # codec work from monopolizing the GIL against the apply thread.
+        from ..storage import codec
+        import time
+        codec.set_decode_nice(lambda: time.sleep(0))
 
     def close(self, wait: bool = False) -> None:
         """``wait=True`` drains in-flight fetches first — required before

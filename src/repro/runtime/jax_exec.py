@@ -28,13 +28,16 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import compat
+from .staging import DeviceStager, stream_chunk_k
 from ..core import bitmaps as bmod
 from ..core import planir
 from ..core.deltagraph import DeltaGraph, Plan
 from ..core.events import (EV_DEL_EDGE, EV_DEL_NODE, EV_NEW_EDGE, EV_NEW_NODE)
 from ..core.query import NO_ATTRS
-from ..kernels import (delta_apply_chain, delta_apply_chain_batched,
-                       delta_apply_chain_prefix_batched)
+from ..kernels import (FusedOut, delta_apply_chain,
+                       delta_apply_chain_batched,
+                       delta_apply_chain_prefix_batched, delta_apply_fused,
+                       segment_sum)
 from ..storage import columnar as col
 
 
@@ -141,7 +144,7 @@ def _stack_bitmaps(chain_idx: list[np.ndarray], U: int) -> jnp.ndarray:
     return jnp.asarray(np.stack(rows))
 
 
-def execute_singlepoint_jax(dg: DeltaGraph, t: int, *, impl: str = "xla",
+def execute_singlepoint_jax(dg: DeltaGraph, t: int, *, impl: str | None = None,
                             pool=None, use_current: bool = True
                             ) -> tuple[np.ndarray, np.ndarray]:
     """Returns (node_mask, edge_mask) bool arrays, computed on-device."""
@@ -159,6 +162,89 @@ def execute_singlepoint_jax(dg: DeltaGraph, t: int, *, impl: str = "xla",
     em &= ~dg.universe.edge_transient[:U_e]
     nm &= ~dg.universe.node_transient[:U_n]
     return nm, em
+
+
+# ---------------------------------------------------------------------------
+# fused retrieval + analytics (single pass over the landed bitmaps)
+# ---------------------------------------------------------------------------
+
+
+class SnapshotAnalytics:
+    """Push-style analytics emitted by the fused delta-apply kernel: the
+    node/edge :class:`FusedOut` partials from the same pass that landed the
+    chain.  ``node.live_count()`` / ``edge.live_count()`` are the snapshot
+    order and size; ``edge.live`` feeds :func:`degrees` (per-node degree via
+    the segment_sum kernel); ``node.weighted_total()`` is the PageRank push
+    mass when per-slot contributions were supplied."""
+
+    def __init__(self, node: FusedOut, edge: FusedOut, dg: DeltaGraph):
+        self.node = node
+        self.edge = edge
+        self._dg = dg
+
+    def num_nodes(self) -> int:
+        return int(self.node.live_count())
+
+    def num_edges(self) -> int:
+        return int(self.edge.live_count())
+
+    def degrees(self, *, impl: str | None = None) -> np.ndarray:
+        """Per-node degree (both endpoints of live edges) reduced from the
+        fused kernel's unpacked edge indicator by the segment_sum kernel —
+        no host round-trip between apply and reduction."""
+        uni = self._dg.universe
+        E, N = uni.num_edges, uni.num_nodes
+        live = self.edge.live[:E][:, None]
+        src = jnp.asarray(uni.edge_src[:E])
+        dst = jnp.asarray(uni.edge_dst[:E])
+        deg = (segment_sum(live, src, N, impl=impl)
+               + segment_sum(live, dst, N, impl=impl))
+        return np.asarray(deg).reshape(-1)
+
+
+def _transient_step(dg: DeltaGraph, U_n: int, U_e: int):
+    """Transient slots cleared as one more chain step (zero adds, packed
+    transient dels) — fused analytics then see exactly the returned masks."""
+    return (bmod.np_pack(dg.universe.node_transient[:U_n]),
+            bmod.np_pack(dg.universe.edge_transient[:U_e]))
+
+
+def execute_singlepoint_fused(dg: DeltaGraph, t: int, *,
+                              node_weights=None, impl: str | None = None,
+                              pool=None, use_current: bool = True
+                              ) -> tuple[np.ndarray, np.ndarray,
+                                         SnapshotAnalytics]:
+    """Single-point retrieval with analytics fused into the apply pass.
+
+    Same plan and chain lowering as :func:`execute_singlepoint_jax`, but
+    executed by the fused kernel: while each bitmap block holds the landed
+    chain state in registers it also emits popcount/degree partials and
+    (optionally, via ``node_weights [num_nodes] f32``) a PageRank-style
+    push accumulator — the separate analytics sweep over the mask is gone.
+    Transient-slot clearing folds into the chain as a final delete step, so
+    analytics and the returned bool masks agree bit-for-bit.
+    """
+    plan = dg.plan_singlepoint(t, NO_ATTRS, use_current)
+    (base_n, base_e), chain = plan_to_chain(dg, plan, pool)
+    U_n, U_e = dg.universe.num_nodes, dg.universe.num_edges
+    W_n, W_e = bmod.num_words(U_n), bmod.num_words(U_e)
+    tn, te = _transient_step(dg, U_n, U_e)
+    n_adds = np.stack([bmod.np_from_indices(c[0], U_n) for c in chain]
+                      + [np.zeros(W_n, np.uint32)])
+    n_dels = np.stack([bmod.np_from_indices(c[1], U_n) for c in chain] + [tn])
+    e_adds = np.stack([bmod.np_from_indices(c[2], U_e) for c in chain]
+                      + [np.zeros(W_e, np.uint32)])
+    e_dels = np.stack([bmod.np_from_indices(c[3], U_e) for c in chain] + [te])
+    w = None
+    if node_weights is not None:
+        w = jnp.asarray(np.asarray(node_weights, np.float32).reshape(-1))
+    fn = delta_apply_fused(jnp.asarray(base_n), jnp.asarray(n_adds),
+                           jnp.asarray(n_dels), w, impl=impl)
+    fe = delta_apply_fused(jnp.asarray(base_e), jnp.asarray(e_adds),
+                           jnp.asarray(e_dels), impl=impl)
+    nm = bmod.np_unpack(np.asarray(fn.mask), U_n)
+    em = bmod.np_unpack(np.asarray(fe.mask), U_e)
+    return nm, em, SnapshotAnalytics(fn, fe, dg)
 
 
 # ---------------------------------------------------------------------------
@@ -234,8 +320,67 @@ def _np_apply_pair(bn: np.ndarray, be: np.ndarray, pair, U_n: int, U_e: int):
     return bn, be
 
 
-def execute_ir_jax(dg: DeltaGraph, ir: Plan, *, impl: str = "xla",
-                   pool=None, prefetch=None
+def _apply_chains_streamed(bases_n, bases_e, chains, U_n: int, U_e: int, *,
+                           impl, prefetch=None, stager: DeviceStager | None
+                           = None) -> tuple[np.ndarray, np.ndarray]:
+    """Land B index-quad chains over the node+edge planes, double-buffered.
+
+    ``chains[i]`` is a list of ``(na, nd, ea, ed)`` slot-index quads.  When
+    the common chain length exceeds the stream chunk
+    (``REPRO_STREAM_CHUNK``, default 8) the ``[B, K, W]`` plane stacks are
+    never materialized whole: the :class:`DeviceStager` builds (codec
+    indices → packed planes) and ``device_put``s chunk *i+1* while chunk
+    *i*'s kernels run.  The chain is a left fold of bitwise steps, so the
+    chunked landing is bit-identical to the monolithic call."""
+    W_n, W_e = bmod.num_words(U_n), bmod.num_words(U_e)
+    B = len(chains)
+    K = max(len(c) for c in chains)
+    if K == 0:
+        return np.asarray(bases_n), np.asarray(bases_e)
+
+    def build(lo: int, hi: int):
+        k = hi - lo
+        an = np.zeros((B, k, W_n), np.uint32)
+        dn = np.zeros((B, k, W_n), np.uint32)
+        ae = np.zeros((B, k, W_e), np.uint32)
+        de = np.zeros((B, k, W_e), np.uint32)
+        for i, chain in enumerate(chains):
+            for j in range(lo, min(hi, len(chain))):
+                na, nd, ea, ed = chain[j]
+                an[i, j - lo] = bmod.np_from_indices(na, U_n)
+                dn[i, j - lo] = bmod.np_from_indices(nd, U_n)
+                ae[i, j - lo] = bmod.np_from_indices(ea, U_e)
+                de[i, j - lo] = bmod.np_from_indices(ed, U_e)
+        return an, dn, ae, de
+
+    ck = stream_chunk_k()
+    if ck < 1 or K <= ck:
+        an, dn, ae, de = build(0, K)
+        out_n = delta_apply_chain_batched(
+            jnp.asarray(bases_n), jnp.asarray(an), jnp.asarray(dn), impl=impl)
+        out_e = delta_apply_chain_batched(
+            jnp.asarray(bases_e), jnp.asarray(ae), jnp.asarray(de), impl=impl)
+        return np.asarray(out_n), np.asarray(out_e)
+
+    if stager is None:
+        stager = DeviceStager(prefetcher=prefetch)
+    nch = -(-K // ck)
+
+    def apply_chunk(carry, dev):
+        bn, be = carry
+        an, dn, ae, de = dev
+        return (delta_apply_chain_batched(bn, an, dn, impl=impl),
+                delta_apply_chain_batched(be, ae, de, impl=impl))
+
+    bn, be = stager.stream(
+        nch, lambda i: build(i * ck, min((i + 1) * ck, K)), apply_chunk,
+        (jnp.asarray(bases_n), jnp.asarray(bases_e)))
+    return np.asarray(bn), np.asarray(be)
+
+
+def execute_ir_jax(dg: DeltaGraph, ir: Plan, *, impl: str | None = None,
+                   pool=None, prefetch=None,
+                   stager: DeviceStager | None = None
                    ) -> dict[Any, tuple[np.ndarray, np.ndarray]]:
     """Execute a plan IR (structure-only) on the JAX bitmap backend.
 
@@ -313,26 +458,11 @@ def execute_ir_jax(dg: DeltaGraph, ir: Plan, *, impl: str = "xla",
             break
         chains = [[_node_pair(dg, byid[s].op, get_payload) for s in seg]
                   for _, seg in segments]
-        K = max(len(c) for c in chains)
-        B = len(segments)
         bases_n = np.stack([vals[p][0] for p, _ in segments])
         bases_e = np.stack([vals[p][1] for p, _ in segments])
-        adds_n = np.zeros((B, K, W_n), np.uint32)
-        dels_n = np.zeros((B, K, W_n), np.uint32)
-        adds_e = np.zeros((B, K, W_e), np.uint32)
-        dels_e = np.zeros((B, K, W_e), np.uint32)
-        for i, chain in enumerate(chains):
-            for j, (na, nd, ea, ed) in enumerate(chain):
-                adds_n[i, j] = bmod.np_from_indices(na, U_n)
-                dels_n[i, j] = bmod.np_from_indices(nd, U_n)
-                adds_e[i, j] = bmod.np_from_indices(ea, U_e)
-                dels_e[i, j] = bmod.np_from_indices(ed, U_e)
-        out_n = np.asarray(delta_apply_chain_batched(
-            jnp.asarray(bases_n), jnp.asarray(adds_n), jnp.asarray(dels_n),
-            impl=impl))
-        out_e = np.asarray(delta_apply_chain_batched(
-            jnp.asarray(bases_e), jnp.asarray(adds_e), jnp.asarray(dels_e),
-            impl=impl))
+        out_n, out_e = _apply_chains_streamed(
+            bases_n, bases_e, chains, U_n, U_e, impl=impl,
+            prefetch=prefetch, stager=stager)
         for i, (_, seg) in enumerate(segments):
             end = seg[-1]
             vals[end] = (out_n[i], out_e[i])
@@ -349,7 +479,7 @@ def execute_ir_jax(dg: DeltaGraph, ir: Plan, *, impl: str = "xla",
     return out
 
 
-def execute_multipoint_jax(dg: DeltaGraph, times, *, impl: str = "xla",
+def execute_multipoint_jax(dg: DeltaGraph, times, *, impl: str | None = None,
                            pool=None, use_current: bool = True,
                            land_in_pool: bool = False, prefetch=None):
     """Batched multipoint retrieval on the JAX backend: one Steiner plan,
@@ -373,8 +503,9 @@ def execute_multipoint_jax(dg: DeltaGraph, times, *, impl: str = "xla",
 # vmapped multi-interval temporal analytics
 # ---------------------------------------------------------------------------
 
-def evolve_intervals_jax(dg: DeltaGraph, intervals, *, impl: str = "xla",
-                         pool=None, use_current: bool = True, prefetch=None
+def evolve_intervals_jax(dg: DeltaGraph, intervals, *, impl: str | None = None,
+                         pool=None, use_current: bool = True, prefetch=None,
+                         stager: DeviceStager | None = None
                          ) -> list[dict[int, tuple[np.ndarray, np.ndarray]]]:
     """Per-timepoint (node_mask, edge_mask) for **B intervals at once**.
 
@@ -420,20 +551,50 @@ def evolve_intervals_jax(dg: DeltaGraph, intervals, *, impl: str = "xla",
         return out
     bases_n = np.stack([bmod.np_pack(start_masks[iv[0]][0]) for iv in ivs])
     bases_e = np.stack([bmod.np_pack(start_masks[iv[0]][1]) for iv in ivs])
-    adds_n = np.zeros((B, Kmax, W_n), np.uint32)
-    dels_n = np.zeros((B, Kmax, W_n), np.uint32)
-    adds_e = np.zeros((B, Kmax, W_e), np.uint32)
-    dels_e = np.zeros((B, Kmax, W_e), np.uint32)
-    for b, qs in enumerate(quads):
-        for j, q in enumerate(qs):
-            adds_n[b, j] = bmod.np_from_indices(q.node_add, U_n)
-            dels_n[b, j] = bmod.np_from_indices(q.node_del, U_n)
-            adds_e[b, j] = bmod.np_from_indices(q.edge_add, U_e)
-            dels_e[b, j] = bmod.np_from_indices(q.edge_del, U_e)
-    pref_n = np.asarray(delta_apply_chain_prefix_batched(
-        jnp.asarray(bases_n), jnp.asarray(adds_n), jnp.asarray(dels_n)))
-    pref_e = np.asarray(delta_apply_chain_prefix_batched(
-        jnp.asarray(bases_e), jnp.asarray(adds_e), jnp.asarray(dels_e)))
+
+    def build(lo: int, hi: int):
+        k = hi - lo
+        an = np.zeros((B, k, W_n), np.uint32)
+        dn = np.zeros((B, k, W_n), np.uint32)
+        ae = np.zeros((B, k, W_e), np.uint32)
+        de = np.zeros((B, k, W_e), np.uint32)
+        for b, qs in enumerate(quads):
+            for j in range(lo, min(hi, len(qs))):
+                q = qs[j]
+                an[b, j - lo] = bmod.np_from_indices(q.node_add, U_n)
+                dn[b, j - lo] = bmod.np_from_indices(q.node_del, U_n)
+                ae[b, j - lo] = bmod.np_from_indices(q.edge_add, U_e)
+                de[b, j - lo] = bmod.np_from_indices(q.edge_del, U_e)
+        return an, dn, ae, de
+
+    ck = stream_chunk_k()
+    if ck < 1 or Kmax <= ck:
+        an, dn, ae, de = build(0, Kmax)
+        pref_n = np.asarray(delta_apply_chain_prefix_batched(
+            jnp.asarray(bases_n), jnp.asarray(an), jnp.asarray(dn)))
+        pref_e = np.asarray(delta_apply_chain_prefix_batched(
+            jnp.asarray(bases_e), jnp.asarray(ae), jnp.asarray(de)))
+    else:
+        # streamed prefix sweep: each chunk's last prefix seeds the next
+        # chunk's base, so chunked prefixes concatenate bit-identically
+        if stager is None:
+            stager = DeviceStager(prefetcher=prefetch)
+        nch = -(-Kmax // ck)
+        parts: list[tuple] = []
+
+        def apply_chunk(carry, dev):
+            bn, be = carry
+            an, dn, ae, de = dev
+            pn = delta_apply_chain_prefix_batched(bn, an, dn)
+            pe = delta_apply_chain_prefix_batched(be, ae, de)
+            parts.append((pn, pe))
+            return pn[:, -1], pe[:, -1]
+
+        stager.stream(nch, lambda i: build(i * ck, min((i + 1) * ck, Kmax)),
+                      apply_chunk,
+                      (jnp.asarray(bases_n), jnp.asarray(bases_e)))
+        pref_n = np.concatenate([np.asarray(p[0]) for p in parts], axis=1)
+        pref_e = np.concatenate([np.asarray(p[1]) for p in parts], axis=1)
     for b, iv in enumerate(ivs):
         for j, t in enumerate(iv[1:]):
             nm = bmod.np_unpack(pref_n[b, j], U_n)

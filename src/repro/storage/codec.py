@@ -387,6 +387,22 @@ def _encode_nice() -> None:
         hook()
 
 
+def set_decode_nice(hook) -> None:
+    """Install (or clear, with ``None``) this thread's between-array
+    *decode* yield hook — the read-side mirror of :func:`set_encode_nice`.
+    Prefetcher workers decode payloads while the apply thread drives
+    device kernels on the same interpreter; yielding between arrays keeps
+    any single ``decode_blob`` from becoming a multi-ms GIL hold in the
+    double-buffered pipeline."""
+    _nice_tl.decode_hook = hook
+
+
+def _decode_nice() -> None:
+    hook = getattr(_nice_tl, "decode_hook", None)
+    if hook is not None:
+        hook()
+
+
 def _encode_v2(arrays: dict[str, np.ndarray]) -> bytes:
     recs = [_struct.pack("<I", len(arrays))]
     raw_size = 0
@@ -457,6 +473,7 @@ def _decode_v2(blob: bytes) -> dict[str, np.ndarray]:
     (n,) = r.unpack("<I")
     out: dict[str, np.ndarray] = {}
     for _ in range(n):
+        _decode_nice()
         (ln,) = r.unpack("<B")
         name = r.take(ln).decode()
         (ld,) = r.unpack("<B")
