@@ -1,0 +1,207 @@
+"""BENCH_shard: sharded multi-worker retrieval vs single-shard at equal
+total KV budget, plus hedged-vs-unhedged tail latency under one slow
+shard.
+
+The workload is a stream of multipoint snapshot queries against a
+history stored in ``P`` mod_hash partitions on one shared store wrapped
+with a simulated remote per-get round-trip (same blobs, same per-get
+cost for every configuration — the *total* KV budget is identical; only
+the worker count changes).  Three acceptance gates (checked into the
+report as ``gates``):
+
+* ``qps_4x_ge_2x``   — 4-worker aggregate QPS >= 2x single-shard;
+* ``bit_identical``  — every sharded result equals the single-shard
+  replay oracle bit-for-bit;
+* ``hedged_tail``    — with one shard stochastically slow, hedged p99
+  < 0.6x unhedged p99 (first completion wins, the re-issued attempt
+  re-samples the slowness).
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.shard_bench --quick
+"""
+from __future__ import annotations
+
+import json
+import random
+import time
+
+import numpy as np
+
+from repro.core import GraphManager, replay
+from repro.core.query import NO_ATTRS
+from repro.data.generators import churn_network
+from repro.runtime.shard import ShardedRetriever
+from repro.storage.kv import KVStore, MemKV
+
+OUT_JSON = "BENCH_shard.json"
+PARTITIONS = 16           # storage partitions (>> workers: balanced rings)
+POINTS = 4                # timepoints per query
+GET_LATENCY_US = 150.0    # simulated per-get remote RTT
+SLOW_SCALE_MS = 100.0     # mean of the slow shard's per-attempt stall
+
+
+class LatencyKV(KVStore):
+    """Fixed per-get remote RTT — every configuration shares one
+    instance: equal blobs, equal per-get cost, equal total KV budget."""
+
+    def __init__(self, inner: KVStore, get_latency_s: float) -> None:
+        super().__init__()
+        self.inner = inner
+        self.lat = float(get_latency_s)
+
+    def get(self, key):
+        time.sleep(self.lat)
+        v = self.inner.get(key)
+        self.stats.add_get(len(v))
+        return v
+
+    def put(self, key, value):
+        self.inner.put(key, value)
+        self.stats.add_put(len(value))
+
+    def delete(self, key):
+        self.inner.delete(key)
+
+    def __contains__(self, key):
+        return key in self.inner
+
+    def keys(self):
+        return self.inner.keys()
+
+
+def _queries(tmax: int, n: int, seed: int = 0) -> list[list[int]]:
+    rng = np.random.default_rng(seed)
+    return [sorted({int(t) for t in rng.integers(0, tmax + 1, POINTS)})
+            for _ in range(n)]
+
+
+def _run(gm, workers: int, queries, reset=None, **kw) -> dict:
+    lats = []
+    with ShardedRetriever(gm, workers, **kw) as sr:
+        t0 = time.perf_counter()
+        out = []
+        for q in queries:
+            if reset is not None:
+                reset()
+            tq = time.perf_counter()
+            out.append(sr.retrieve(q))
+            lats.append(time.perf_counter() - tq)
+        wall = time.perf_counter() - t0
+        hedges, requeues = sr.hedges_total, sr.requeues_total
+    lats_us = np.sort(np.asarray(lats)) * 1e6
+    return {"qps": len(queries) / wall, "wall_s": wall,
+            "p50_us": float(np.percentile(lats_us, 50)),
+            "p99_us": float(np.percentile(lats_us, 99)),
+            "hedges": hedges, "requeues": requeues,
+            "results": out}
+
+
+def bench_shard(quick: bool = False):
+    n = 3_000 if quick else 8_000
+    n_queries = 24 if quick else 60
+    uni, ev = churn_network(n_initial_edges=n // 12, n_events=n, seed=7)
+    tmax = int(ev.time[-1])
+    queries = _queries(tmax, n_queries, seed=3)
+
+    store = LatencyKV(MemKV(), GET_LATENCY_US * 1e-6)
+    gm = GraphManager(uni, ev, store=store, L=max(n // 40, 64), k=2,
+                      cache_bytes=0, prefetch_workers=0,
+                      num_partitions=PARTITIONS, partition_fn="mod_hash",
+                      diff_fn="intersection")
+
+    rows = []
+    report: dict = {"n_events": n, "partitions": PARTITIONS,
+                    "n_queries": n_queries, "points_per_query": POINTS,
+                    "kv_get_latency_us": GET_LATENCY_US, "workers": {}}
+
+    # ---- throughput sweep: same store, same budget, more workers --------
+    runs = {}
+    for w in (1, 2, 4):
+        res = _run(gm, w, queries, max_hedges=0)
+        runs[w] = res
+        row = {k: round(v, 2) if isinstance(v, float) else v
+               for k, v in res.items() if k != "results"}
+        report["workers"][str(w)] = row
+        rows.append((f"shard/workers{w}", res["p50_us"], row))
+
+    # ---- gate: bit-identical to the single-shard replay oracle ----------
+    identical = True
+    for q, single, multi in zip(queries, runs[1]["results"],
+                                runs[4]["results"]):
+        for t in q:
+            truth = replay(uni, ev, t)
+            for got in (single[t], multi[t]):
+                if not (np.array_equal(got.node_mask, truth.node_mask)
+                        and np.array_equal(got.edge_mask, truth.edge_mask)):
+                    identical = False
+    speedup = runs[4]["qps"] / runs[1]["qps"]
+    report["qps_speedup_4w_vs_1w"] = round(speedup, 3)
+
+    # ---- tail latency under one slow shard: hedged vs unhedged ----------
+    # One shard is degraded: the *first* attempt it serves per query
+    # stalls (floor + exponential tail — a slow replica / GC-pausing
+    # process); a re-issued attempt takes a healthy path.  The largest
+    # shard is the straggler — its task is the first assigned (largest
+    # deficit), i.e. the oldest outstanding, so the hedging policy
+    # duplicates exactly it and first completion wins.
+    with ShardedRetriever(gm, 4) as probe:
+        asg = probe.assignment(PARTITIONS)
+    slow_worker = max(asg, key=lambda w: len(asg[w]))
+
+    class DegradedShard:
+        def __init__(self, seed: int) -> None:
+            self.rng = random.Random(seed)
+            self.calls = 0
+
+        def reset(self) -> None:
+            self.calls = 0
+
+        def __call__(self, worker, parts) -> None:
+            if worker != slow_worker:
+                return
+            self.calls += 1
+            if self.calls == 1:
+                time.sleep((0.5 + self.rng.expovariate(1.0))
+                           * SLOW_SCALE_MS * 1e-3)
+
+    tail = {}
+    for mode, hedges in (("unhedged", 0), ("hedged", 1)):
+        stall = DegradedShard(seed=11)
+        res = _run(gm, 4, queries, reset=stall.reset, max_hedges=hedges,
+                   hedge_frac=1.0, hedge_delay_s=2e-3,
+                   shard_hook=stall)
+        tail[mode] = res
+        row = {k: round(v, 2) if isinstance(v, float) else v
+               for k, v in res.items() if k != "results"}
+        report[f"slow_shard_{mode}"] = row
+        rows.append((f"shard/slow_{mode}", res["p99_us"], row))
+    p99_ratio = tail["hedged"]["p99_us"] / tail["unhedged"]["p99_us"]
+    report["hedged_p99_over_unhedged_p99"] = round(p99_ratio, 3)
+
+    report["gates"] = {
+        "qps_4x_ge_2x": bool(speedup >= 2.0),
+        "bit_identical": bool(identical),
+        "hedged_tail": bool(p99_ratio < 0.6),
+    }
+    gm.close()
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("shard/report", 0.0,
+                 {"json": OUT_JSON, **report["gates"]}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_shard(quick=args.quick):
+        print(f"{name},{us:.1f},\"{json.dumps(derived)}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

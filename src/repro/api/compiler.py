@@ -153,3 +153,29 @@ class QueryCompiler:
             from ..core.temporal import resolve_op
             resolve_op(doc.op, {})   # registry check -> UnknownOperatorError
         return CompiledQuery(doc, options, tex)
+
+
+# ---------------------------------------------------------------------------
+# cross-shard planning
+# ---------------------------------------------------------------------------
+
+
+def scatter_plans(irs, parts_by_shard: dict[Any, tuple[int, ...]],
+                  total_parts: int) -> dict[Any, Any]:
+    """Scatter one or more compiled plan IRs across shards.
+
+    Each plan is scattered (:func:`repro.core.planir.scatter_ir`) so a
+    shard's Fetch nodes pull only the storage partitions it owns; a shard
+    handed several plans (a co-batched document group) gets them merged
+    back into one DAG with :func:`repro.core.planir.merge_irs`, so shared
+    prefixes still fetch and apply once *per shard*.  Returns
+    ``{shard: PlanIR}``; the per-shard slot results are unioned by the
+    sharded retriever's gather step."""
+    from ..core.planir import merge_irs, scatter_ir
+
+    per_shard: dict[Any, list] = {s: [] for s in parts_by_shard}
+    for ir in irs:
+        for s, sir in scatter_ir(ir, parts_by_shard, total_parts).items():
+            per_shard[s].append(sir)
+    return {s: (merge_irs(plans) if len(plans) > 1 else plans[0])
+            for s, plans in per_shard.items()}

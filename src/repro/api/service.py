@@ -228,12 +228,24 @@ class QueryService:
                 misses.append(t)
             if misses:
                 plan = dg.plan_multipoint(misses, options, use_current)
-                # prefetch for batch-shaped queries (even when cache hits
-                # leave a single miss) — legacy ``get_snapshots`` parity; a
-                # lone singlepoint query stays synchronous (``get_snapshot``
-                # parity: thread-queue latency beats overlap on fast stores)
-                pf = gm.prefetcher if len(times) > 1 else None
-                states = dg.execute(plan, options, pool=gm.pool, prefetch=pf)
+                if gm.sharded is not None:
+                    # sharded multi-worker path (runtime/shard.py): scatter
+                    # the merged plan across the shard-executor pool and
+                    # gather the per-shard slot results — bit-identical to
+                    # the unsharded execution below
+                    states = gm.sharded.execute(dg, plan, options,
+                                                pool=gm.pool)
+                    stats.update({f"shard_{k}": v for k, v in
+                                  gm.sharded.last_stats.items()})
+                else:
+                    # prefetch for batch-shaped queries (even when cache
+                    # hits leave a single miss) — legacy ``get_snapshots``
+                    # parity; a lone singlepoint query stays synchronous
+                    # (``get_snapshot`` parity: thread-queue latency beats
+                    # overlap on fast stores)
+                    pf = gm.prefetcher if len(times) > 1 else None
+                    states = dg.execute(plan, options, pool=gm.pool,
+                                        prefetch=pf)
                 # per-target deps: only the pins on a target's own branch
                 # invalidate its entry, not every pin the batch touched
                 deps = plan.per_target_source_nids()

@@ -902,17 +902,23 @@ class DeltaGraph:
         from ..storage.kv import mget_optional
         return mget_optional(self.store, keys)
 
-    def _delta_keys(self, pid: int, options: AttrOptions
+    def _delta_keys(self, pid: int, options: AttrOptions,
+                    parts: tuple[int, ...] | None = None
                     ) -> tuple[list, list, list]:
-        keys = [(p, pid, col.STRUCT) for p in range(self.P)]
+        """Component keys for one delta payload.  ``parts`` restricts to a
+        subset of the storage partitions (sharded execution fetches only
+        the partitions a shard owns); ``None`` = all of them."""
+        ps = range(self.P) if parts is None else parts
+        keys = [(p, pid, col.STRUCT) for p in ps]
         na_keys = [(p, pid, f"{col.NODEATTR}.{c}")
-                   for p in range(self.P) for c in options.node_cols]
+                   for p in ps for c in options.node_cols]
         ea_keys = [(p, pid, f"{col.EDGEATTR}.{c}")
-                   for p in range(self.P) for c in options.edge_cols]
+                   for p in ps for c in options.edge_cols]
         return keys, na_keys, ea_keys
 
-    def _fetch_delta(self, pid: int, options: AttrOptions) -> Delta:
-        keys, na_keys, ea_keys = self._delta_keys(pid, options)
+    def _fetch_delta(self, pid: int, options: AttrOptions,
+                     parts: tuple[int, ...] | None = None) -> Delta:
+        keys, na_keys, ea_keys = self._delta_keys(pid, options, parts)
         blobs = self._mget(keys + na_keys + ea_keys)
         return self._decode_delta(blobs, len(keys), len(na_keys))
 
@@ -938,17 +944,21 @@ class DeltaGraph:
                      cat("edge_del"), cat_attr(nas), cat_attr(eas))
 
     def _elist_keys(self, pid: int, options: AttrOptions,
-                    transient: bool = False) -> list:
+                    transient: bool = False,
+                    parts: tuple[int, ...] | None = None) -> list:
         comps = [col.ELIST_STRUCT]
         comps += [f"{col.ELIST_NODEATTR}.{c}" for c in options.node_cols]
         comps += [f"{col.ELIST_EDGEATTR}.{c}" for c in options.edge_cols]
         if transient:
             comps.append(col.ELIST_TRANSIENT)
-        return [(p, pid, c) for p in range(self.P) for c in comps]
+        ps = range(self.P) if parts is None else parts
+        return [(p, pid, c) for p in ps for c in comps]
 
     def _fetch_elist(self, pid: int, options: AttrOptions,
-                     transient: bool = False) -> dict[str, dict[str, np.ndarray]]:
-        keys = self._elist_keys(pid, options, transient)
+                     transient: bool = False,
+                     parts: tuple[int, ...] | None = None
+                     ) -> dict[str, dict[str, np.ndarray]]:
+        keys = self._elist_keys(pid, options, transient, parts)
         return self._decode_elist(keys, self._mget(keys))
 
     @staticmethod
@@ -1017,6 +1027,14 @@ class DeltaGraph:
         from ..runtime.executor import HostExecutor
         t_start = time.perf_counter()
         out = HostExecutor(self, prefetcher=prefetch).run(plan, options, pool)
+        self._record_workload(plan, options, t_start)
+        return out
+
+    def _record_workload(self, plan: Plan, options: AttrOptions,
+                         t_start: float) -> None:
+        """Feed one executed plan into the workload stats (advisor input).
+        Shared by :meth:`execute` and the sharded retriever, which runs the
+        scattered plan through its own executor pool."""
         if self.workload is not None:
             # time-point targets only (node-materialization plans carry
             # ("node", nid) targets and are not workload — recording their
@@ -1033,7 +1051,6 @@ class DeltaGraph:
                 for t in tts:
                     self.workload.record(self._leaf_for_time(int(t)), share,
                                          options, wall)
-        return out
 
     # --------------------------------------------------------------- queries
     def get_snapshot(self, t: int, options: AttrOptions = NO_ATTRS,

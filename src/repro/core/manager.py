@@ -194,6 +194,9 @@ class GraphManager:
             self.prefetcher = None
         self._temporal = None
         self._query_service = None
+        # sharded multi-worker retrieval (runtime/shard.py); off by default,
+        # enabled via enable_sharding() / serve.py --shards N
+        self.sharded = None
         # concurrent retrievals are supported (cache and workload counters
         # are internally locked); advisor *replans* mutate the pool and the
         # skeleton's materialization marks, so they are serialized here —
@@ -216,6 +219,9 @@ class GraphManager:
         if self._ingest is not None:
             self._ingest.close()
             self._ingest = None
+        if self.sharded is not None:
+            self.sharded.close()
+            self.sharded = None
         if self.prefetcher is not None:
             # drain in-flight fetches before the store's handles go away
             self.prefetcher.close(wait=self._owns_store)
@@ -370,6 +376,30 @@ class GraphManager:
         publishes a new epoch, and folds full leaves red/green — readers
         that pinned an epoch mid-query are unaffected."""
         self.ingest.append(ev)
+
+    # ------------------------------------------------------------- sharding
+    def enable_sharding(self, workers: int | Sequence[str] | None = None,
+                        **kwargs) -> "Any":
+        """Turn on sharded multi-worker retrieval
+        (:class:`~repro.runtime.shard.ShardedRetriever`): every cache-miss
+        retrieval through the query service scatters its plan across a
+        pool of shard executors (one per worker, partitions assigned by
+        consistent hashing) and gathers the per-shard slot results.
+        ``workers`` defaults to one worker per storage partition.  Results
+        stay bit-identical to unsharded execution.  Re-enabling replaces
+        the previous retriever; extra kwargs go to the retriever
+        (hedging/retry policy)."""
+        from ..runtime.shard import ShardedRetriever
+        self.disable_sharding()
+        if workers is None:
+            workers = max(1, self.dg.P)
+        self.sharded = ShardedRetriever(self, workers, **kwargs)
+        return self.sharded
+
+    def disable_sharding(self) -> None:
+        if self.sharded is not None:
+            self.sharded.close()
+            self.sharded = None
 
     # -------------------------------------------------------- materialization
     def enable_advisor(self, budget_bytes: int = 64 << 20, *,

@@ -41,9 +41,15 @@ from typing import Any, Sequence
 
 @dataclasses.dataclass(frozen=True)
 class Fetch:
-    """Fetch a payload's components from the KV store."""
+    """Fetch a payload's components from the KV store.
+
+    ``parts`` restricts the fetch to a subset of the index's storage
+    partitions (``None`` = all): the sharded scatter (:func:`scatter_ir`)
+    rewrites every Fetch so each shard pulls only the sub-payloads whose
+    slots it owns."""
     kind: str                       # 'delta' | 'elist'
     pid: int
+    parts: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +134,8 @@ class IRNode:
         if isinstance(op, Fork):
             return ("fork", op.fanout)
         if isinstance(op, Fetch):
+            if op.parts is not None:
+                return ("fetch", op.kind, op.pid, op.parts)
             return ("fetch", op.kind, op.pid)
         if isinstance(op, Materialize):
             return ("materialize", op.target)
@@ -380,3 +388,42 @@ def merge_irs(irs: Sequence[PlanIR]) -> PlanIR:
         nodes.append(n)
     fetches = sum(1 for n in nodes if isinstance(n.op, Fetch))
     return _insert_forks(PlanIR(nodes, targets, total, fetches))
+
+
+# ---------------------------------------------------------------------------
+# cross-shard scatter
+# ---------------------------------------------------------------------------
+
+
+def scatter_ir(ir: PlanIR, parts_by_shard: dict[Any, tuple[int, ...]],
+               total_parts: int) -> dict[Any, PlanIR]:
+    """Scatter one plan into per-shard plan IRs.
+
+    The DAG topology is shared — every shard applies the same step
+    sequence — but each shard's Fetch nodes are restricted to the storage
+    partitions it owns, so a shard pulls (and decodes) only the
+    sub-payloads whose slots it is responsible for.  Apply weights are
+    scaled by the shard's partition fraction: the sum of the per-shard
+    costs equals the unsharded plan's cost.
+
+    Correctness of the later gather rests on the partitioner contract:
+    events for slot ``s`` are stored only under partition ``h_p(s)``, so a
+    shard executing the restricted plan computes exactly the unsharded
+    result on the slots it owns (other slots may be stale and are dropped
+    at gather time)."""
+    out: dict[Any, PlanIR] = {}
+    for shard, parts in parts_by_shard.items():
+        parts = tuple(sorted(int(p) for p in parts))
+        frac = len(parts) / max(int(total_parts), 1)
+        nodes = []
+        for n in ir.nodes:
+            if isinstance(n.op, Fetch):
+                nodes.append(dataclasses.replace(
+                    n, op=Fetch(n.op.kind, n.op.pid, parts)))
+            elif n.weight:
+                nodes.append(dataclasses.replace(n, weight=n.weight * frac))
+            else:
+                nodes.append(n)
+        out[shard] = PlanIR(nodes, dict(ir.targets),
+                            ir.total_weight * frac, ir.payload_fetches)
+    return out

@@ -34,3 +34,11 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     if len(devices) < need:
         raise RuntimeError(f"need {need} devices, have {len(devices)}")
     return Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+
+
+def retrieval_mesh(partitions: int, axis: str = "data") -> Mesh:
+    """1-D mesh for sharded snapshot retrieval: one device per storage
+    partition, so the ``word_cyclic`` layout row owned by partition ``p``
+    lives on device ``p`` and the delta-apply chain runs collective-free
+    (see :func:`repro.runtime.jax_exec.execute_singlepoint_sharded`)."""
+    return make_mesh((partitions,), (axis,))

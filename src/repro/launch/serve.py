@@ -184,11 +184,13 @@ def run_query_documents(gm, lines: Iterable[str],
 def serve_query(n_events: int, batch: int, input_path: str | None,
                 seed: int = 0, codec: str = "v2", kv: str = "mem",
                 kv_dir: str | None = None, hot_mb: float = 8.0,
-                budget_mb: float = 0.0) -> None:
+                budget_mb: float = 0.0, shards: int = 1) -> None:
     """Real request serving: NDJSON GraphQuery documents in, JSON
     QueryResult envelopes out (stdout stays pure NDJSON; the summary goes
     to stderr).  ``--advisor-mb > 0`` also enables the materialization
-    advisor under that GraphPool budget."""
+    advisor under that GraphPool budget.  ``--shards N > 1`` stores the
+    history in N mod_hash partitions and serves retrievals through N
+    shard workers (scatter/gather with hedged fetches)."""
     import os as _os
 
     from ..core import GraphManager
@@ -203,13 +205,20 @@ def serve_query(n_events: int, batch: int, input_path: str | None,
     if kv != "mem":
         d = _os.path.join(kv_dir, "query") if kv_dir else None
         store = make_store(kv, directory=d, hot_bytes=int(hot_mb * 2**20))
+    part_kw = {}
+    if shards > 1:
+        part_kw = dict(num_partitions=shards, partition_fn="mod_hash")
     gm = GraphManager(uni, ev, store=store,
                       L=max(n_events // 40, 64), k=2,
-                      diff_fn="intersection")
+                      diff_fn="intersection", **part_kw)
     if budget_mb > 0:
         gm.enable_advisor(budget_bytes=int(budget_mb * 2**20))
+    if shards > 1:
+        gm.enable_sharding(shards)
     print(f"ready: {n_events} events, tmax={int(ev.time[-1])}, "
-          f"doc-batch={batch}", file=sys.stderr, flush=True)
+          f"doc-batch={batch}"
+          + (f", shards={shards}" if shards > 1 else ""),
+          file=sys.stderr, flush=True)
 
     lines = (open(input_path) if input_path and input_path != "-"
              else sys.stdin)
@@ -225,9 +234,15 @@ def serve_query(n_events: int, batch: int, input_path: str | None,
             lines.close()
         wall = time.perf_counter() - t0
         st = gm.store.stats
+        shard_note = ""
+        if gm.sharded is not None:
+            shard_note = (f"  shards: {shards} workers, "
+                          f"{gm.sharded.hedges_total} hedges, "
+                          f"{gm.sharded.requeues_total} requeues")
         print(f"served {served} documents ({ok} ok) in {wall:.2f}s "
               f"({served / max(wall, 1e-9):.0f} docs/s)  "
-              f"kv: {st.gets} gets, {st.bytes_read / 2**20:.2f} MiB",
+              f"kv: {st.gets} gets, {st.bytes_read / 2**20:.2f} MiB"
+              + shard_note,
               file=sys.stderr, flush=True)
         gm.close()
         if store is not None:
@@ -492,6 +507,10 @@ def main() -> None:
     ap.add_argument("--advisor-mb", type=float, default=0.0,
                     help="query mode: enable the materialization advisor "
                          "under this GraphPool budget (0 = off)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="query mode: partition the history into this many "
+                         "mod_hash shards and serve retrievals through a "
+                         "shard-worker pool (1 = unsharded)")
     ap.add_argument("--duration", type=float, default=30.0,
                     help="ingest mode: seconds to pace the live event "
                          "stream over")
@@ -511,7 +530,8 @@ def main() -> None:
     if args.mode == "query":
         serve_query(args.events, args.doc_batch, args.input,
                     codec=args.codec, kv=args.kv, kv_dir=args.kv_dir,
-                    hot_mb=args.hot_mb, budget_mb=args.advisor_mb)
+                    hot_mb=args.hot_mb, budget_mb=args.advisor_mb,
+                    shards=args.shards)
     elif args.mode == "snapshots":
         serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
                         batch=args.multipoint_batch, codec=args.codec,

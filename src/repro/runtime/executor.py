@@ -138,10 +138,13 @@ class HostExecutor:
 
     # -- payload fetch plumbing --------------------------------------------
     def _fetch_keys(self, op: Fetch, options: AttrOptions):
+        # a scattered (per-shard) plan restricts each Fetch to the
+        # partitions the shard owns; unsharded plans carry parts=None
         if op.kind == "delta":
-            keys, na, ea = self.dg._delta_keys(op.pid, options)
+            keys, na, ea = self.dg._delta_keys(op.pid, options,
+                                               parts=op.parts)
             return keys + na + ea, (len(keys), len(na))
-        return self.dg._elist_keys(op.pid, options), None
+        return self.dg._elist_keys(op.pid, options, parts=op.parts), None
 
     def _decode(self, op: Fetch, keys: list, meta, blobs: list):
         if op.kind == "delta":

@@ -23,9 +23,14 @@ from typing import Any, Callable, Iterable
 
 
 def retry(fn: Callable, *, attempts: int = 4, base_delay: float = 0.01,
-          retryable=(IOError, KeyError, TimeoutError),
+          retryable=(IOError, TimeoutError),
           sleep: Callable = time.sleep):
-    last = None
+    """Bounded exponential backoff.  ``KeyError`` is deliberately *not*
+    retryable by default: a missing blob is a routing/consistency bug, not
+    a transient fault, and backing off on it turns every such bug into a
+    multi-attempt stall."""
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
     for i in range(attempts):
         try:
             return fn()
@@ -33,6 +38,8 @@ def retry(fn: Callable, *, attempts: int = 4, base_delay: float = 0.01,
             last = e
             if i + 1 < attempts:
                 sleep(base_delay * (2 ** i))
+    # re-raise the final attempt's exception with its original traceback
+    # (the exception object carries __traceback__; `raise` appends here)
     raise last
 
 
@@ -46,6 +53,12 @@ class HeartbeatTracker:
     def beat(self, worker: str) -> None:
         self.last_seen[worker] = self.clock()
 
+    def mark_dead(self, worker: str) -> None:
+        """Administratively expire a worker (fault injection, or a failed
+        task observed out-of-band): it reads as dead from now on, until a
+        fresh :meth:`beat`."""
+        self.last_seen[worker] = float("-inf")
+
     def dead(self) -> list[str]:
         now = self.clock()
         return [w for w, t in self.last_seen.items()
@@ -58,24 +71,19 @@ class HeartbeatTracker:
 
 
 def elastic_replan(partitions: int, workers: list[str]) -> dict[int, str]:
-    """Consistent-hash partition→worker assignment: when one worker dies,
-    only its partitions move (stable for the survivors)."""
+    """Rendezvous (highest-random-weight) partition→worker assignment:
+    partition ``p`` goes to the worker maximizing ``h(p, w)``.  When a
+    worker dies only its partitions move — removing ``w`` cannot change
+    any other partition's argmax — and each partition picks independently
+    and uniformly, so the load is multinomial-balanced (the ring variant's
+    arc-length skew made small fleets badly lopsided)."""
     import hashlib
 
     def h(s: str) -> int:
         return int(hashlib.md5(s.encode()).hexdigest()[:8], 16)
 
-    ring = sorted((h(f"{w}#{v}"), w) for w in workers for v in range(8))
-    out = {}
-    for p in range(partitions):
-        hp = h(f"part{p}")
-        for hv, w in ring:
-            if hv >= hp:
-                out[p] = w
-                break
-        else:
-            out[p] = ring[0][1]
-    return out
+    return {p: max(workers, key=lambda w: h(f"part{p}@{w}"))
+            for p in range(partitions)}
 
 
 @dataclasses.dataclass
@@ -94,7 +102,8 @@ class StragglerMitigator:
     wins) — bounded duplicate work for a bounded tail.
     """
 
-    def __init__(self, tasks: list[FetchTask], hedge_frac: float = 0.05):
+    def __init__(self, tasks: list[FetchTask], hedge_frac: float = 0.05,
+                 max_duplicates: int = 1):
         self.queues: dict[int, list[FetchTask]] = {}
         for t in tasks:
             self.queues.setdefault(t.partition, []).append(t)
@@ -102,7 +111,14 @@ class StragglerMitigator:
         self.outstanding: dict[Any, FetchTask] = {}
         self.done: set[Any] = set()
         self.hedge_threshold = max(1, int(len(tasks) * hedge_frac))
+        # per-task duplicate cap: N idle workers must not all pile onto
+        # one outstanding key (unbounded duplicates defeat the point of
+        # hedging — bounded extra work for a bounded tail)
+        self.max_duplicates = max(0, int(max_duplicates))
         self.duplicates = 0
+        self._assign_seq = 0
+        self._seq: dict[Any, int] = {}      # key -> first-assignment order
+        self._dups: dict[Any, int] = {}     # key -> duplicates handed out
 
     def remaining(self) -> int:
         return sum(len(q) for q in self.queues.values())
@@ -119,20 +135,43 @@ class StragglerMitigator:
         if best is not None:
             task = self.queues[best[1]].pop(0)
             self.outstanding[task.key] = task
+            self._seq[task.key] = self._assign_seq
+            self._assign_seq += 1
             return task
-        # hedge: replicate an outstanding task for an idle worker
+        # hedge: replicate for an idle worker the *oldest-assigned*
+        # outstanding task that still has duplicate budget — the task
+        # most likely stuck on a straggler, each key at most
+        # ``max_duplicates`` extra times
         if self.outstanding and len(self.outstanding) <= self.hedge_threshold:
-            task = next(iter(self.outstanding.values()))
-            self.duplicates += 1
-            return task
+            cands = [k for k in self.outstanding
+                     if self._dups.get(k, 0) < self.max_duplicates]
+            if cands:
+                key = min(cands, key=lambda k: self._seq.get(k, 0))
+                self._dups[key] = self._dups.get(key, 0) + 1
+                self.duplicates += 1
+                return self.outstanding[key]
         return None
 
     def complete(self, key: Any) -> bool:
         """Returns True if this completion is the first for the task."""
         self.outstanding.pop(key, None)
+        self._seq.pop(key, None)
+        self._dups.pop(key, None)
         if key in self.done:
             return False
         self.done.add(key)
+        return True
+
+    def fail(self, key: Any) -> bool:
+        """A worker's attempt errored: drop its claim and requeue the task
+        for another worker, unless some attempt already completed.  Returns
+        True when the task was requeued."""
+        task = self.outstanding.pop(key, None)
+        self._seq.pop(key, None)
+        self._dups.pop(key, None)
+        if task is None or key in self.done:
+            return False
+        self.queues.setdefault(task.partition, []).append(task)
         return True
 
     def finished(self) -> bool:

@@ -649,6 +649,111 @@ def unshard(words_pw: np.ndarray, W: int) -> np.ndarray:
     return out[:W]
 
 
+def _scatter_row(out_kp: np.ndarray, ix: np.ndarray, Pn: int) -> None:
+    """OR slot indices into one partition row [Wp] of the word_cyclic
+    layout (the caller guarantees every slot belongs to that row)."""
+    ix = np.asarray(ix, np.int64)
+    if ix.size == 0:
+        return
+    lbit = ((ix >> 5) // Pn) * 32 + (ix & 31)
+    np.bitwise_or.at(out_kp, lbit >> 5,
+                     np.uint32(1) << (lbit & 31).astype(np.uint32))
+
+
+_EMPTY_PAIR = (np.zeros(0, np.int32),) * 4
+
+
+def plan_to_chain_sharded(dg: DeltaGraph, plan: Plan, Pn: int, pool=None
+                          ) -> tuple[tuple[np.ndarray, np.ndarray],
+                                     tuple[np.ndarray, ...]]:
+    """Lower a *singlepoint* plan into base bitmaps plus per-partition
+    ``[K, P, Wp]`` add/del stacks, fetching each storage partition's
+    sub-payloads **separately** — the fetch pattern of the aligned
+    deployment, where device ``p`` pulls only the partition-``p`` keys
+    from the store and fills exactly its own layout row.
+
+    Requires ``dg.P == Pn`` under the ``word_cyclic`` partitioner, so a
+    delta/eventlist sub-payload's slots land entirely in row ``p``.
+    In-memory steps (recent events, which are not yet partitioned into
+    storage) carry slots from every partition and are scattered across
+    rows like the dense path does."""
+    assert len(plan.targets) == 1, "use per-branch lowering for multipoint"
+    if dg.P != Pn or dg.partition_fn_name != "word_cyclic":
+        raise ValueError(
+            f"aligned sharded lowering needs dg.P == {Pn} storage "
+            f"partitions under word_cyclic; have P={dg.P} "
+            f"fn={dg.partition_fn_name}")
+    steps = plan.steps
+    src = steps[0]
+    U_n, U_e = dg.universe.num_nodes, dg.universe.num_edges
+    entries: list[tuple[str, Any]] = []
+    if src.action[0] == "empty":
+        base_n = np.zeros(bmod.num_words(U_n), np.uint32)
+        base_e = np.zeros(bmod.num_words(U_e), np.uint32)
+    elif src.action[0] == "mat":
+        base_n, base_e = pool._resolve_masks(src.action[1])
+        base_n = _fit_words(base_n, bmod.num_words(U_n))
+        base_e = _fit_words(base_e, bmod.num_words(U_e))
+    elif src.action[0] == "current":
+        st = dg._last_leaf_state.resized(dg.universe)
+        base_n = bmod.np_pack(st.node_mask)
+        base_e = bmod.np_pack(st.edge_mask)
+        entries.append(("full", _recent_pair(dg, True, None)))
+    else:  # pragma: no cover
+        raise ValueError(src.action)
+    for st in steps[1:]:
+        kind = st.action[0]
+        if kind == "delta":
+            per = []
+            for p in range(Pn):
+                d = dg._fetch_delta(st.action[1], NO_ATTRS, parts=(p,))
+                if st.action[2]:
+                    per.append((d.node_add, d.node_del,
+                                d.edge_add, d.edge_del))
+                else:
+                    per.append((d.node_del, d.node_add,
+                                d.edge_del, d.edge_add))
+            entries.append(("parts", per))
+        elif kind == "elist":
+            per = []
+            for p in range(Pn):
+                comps = dg._fetch_elist(st.action[1], NO_ATTRS,
+                                        parts=(p,))
+                per.append(_elist_pair(comps, st.action[2], st.action[3])
+                           if col.ELIST_STRUCT in comps else _EMPTY_PAIR)
+            entries.append(("parts", per))
+        elif kind == "recent":
+            entries.append(("full", _recent_pair(dg, st.action[2],
+                                                 st.action[3])))
+        elif kind == "noop":
+            pass
+        else:  # pragma: no cover
+            raise ValueError(st.action)
+    K = len(entries)
+    Wp_n = -(-bmod.num_words(U_n) // Pn)
+    Wp_e = -(-bmod.num_words(U_e) // Pn)
+    stacks = (np.zeros((K, Pn, Wp_n), np.uint32),
+              np.zeros((K, Pn, Wp_n), np.uint32),
+              np.zeros((K, Pn, Wp_e), np.uint32),
+              np.zeros((K, Pn, Wp_e), np.uint32))
+    for k, (tag, data) in enumerate(entries):
+        if tag == "parts":
+            for p, pair in enumerate(data):
+                for st_arr, ix in zip(stacks, pair):
+                    _scatter_row(st_arr[k, p], ix, Pn)
+        else:  # full-state step: slots span partitions
+            for st_arr, ix in zip(stacks, data):
+                ix = np.asarray(ix, np.int64)
+                if ix.size == 0:
+                    continue
+                U = U_n if st_arr is stacks[0] or st_arr is stacks[1] else U_e
+                row, lbit = _to_sharded_layout(ix, U, Pn)
+                np.bitwise_or.at(
+                    st_arr[k], (row, lbit >> 5),
+                    np.uint32(1) << (lbit & 31).astype(np.uint32))
+    return (base_n, base_e), stacks
+
+
 def make_retrieval_fn(mesh: Mesh, axis: str = "data"):
     """Builds the shard_map'ed chain applier.  Each device owns one row of
     the [P, Wp] layout; the chain is applied locally — no collectives."""
@@ -676,16 +781,25 @@ def execute_singlepoint_sharded(dg: DeltaGraph, t: int, mesh: Mesh, *,
     paper's aligned deployment)."""
     Pn = mesh.shape[axis]
     plan = dg.plan_singlepoint(t, NO_ATTRS, use_current)
-    (base_n, base_e), chain = plan_to_chain(dg, plan, pool)
     U_n, U_e = dg.universe.num_nodes, dg.universe.num_edges
     fn = make_retrieval_fn(mesh, axis)
+    aligned = dg.P == Pn and dg.partition_fn_name == "word_cyclic"
+    if aligned:
+        # aligned deployment: each partition's sub-payloads are fetched
+        # separately and fill exactly their own layout row
+        (base_n, base_e), (an, dn, ae, de) = plan_to_chain_sharded(
+            dg, plan, Pn, pool)
+        sides = ((base_n, an, dn, U_n), (base_e, ae, de, U_e))
+    else:
+        (base_n, base_e), chain = plan_to_chain(dg, plan, pool)
+        sides = tuple(
+            (base, _stack_sharded(ix_a, U, Pn), _stack_sharded(ix_d, U, Pn), U)
+            for base, ix_a, ix_d, U in (
+                (base_n, [c[0] for c in chain], [c[1] for c in chain], U_n),
+                (base_e, [c[2] for c in chain], [c[3] for c in chain], U_e)))
     outs = []
-    for base, ix_a, ix_d, U in (
-            (base_n, [c[0] for c in chain], [c[1] for c in chain], U_n),
-            (base_e, [c[2] for c in chain], [c[3] for c in chain], U_e)):
+    for base, adds, dels, U in sides:
         b = sharded_base(np.asarray(base), Pn)
-        adds = _stack_sharded(ix_a, U, Pn)
-        dels = _stack_sharded(ix_d, U, Pn)
         out = np.asarray(fn(jnp.asarray(b), jnp.asarray(adds), jnp.asarray(dels)))
         outs.append(bmod.np_unpack(unshard(out, bmod.num_words(U)), U))
     nm, em = outs

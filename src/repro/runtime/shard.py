@@ -1,0 +1,304 @@
+"""Sharded multi-worker retrieval (paper §4.6: "single-site or parallel
+processing").
+
+One query, ``W`` shard workers: the graph's slot space is partitioned by
+node-ID hash (``runtime/partition.py`` — the same registered partitioners
+that route :class:`~repro.storage.kv.PartitionedKV` and split every
+persisted delta into per-partition sub-payloads), partitions are assigned
+to workers with consistent hashing (:func:`~repro.runtime.fault
+.elastic_replan` — killing a worker moves only its partitions), and one
+plan IR is scattered into per-shard IRs
+(:func:`~repro.api.compiler.scatter_plans` /
+:func:`~repro.core.planir.scatter_ir`).
+
+Each shard executes the *same* step DAG, but its Fetch nodes pull only
+the sub-payloads of the partitions it owns.  The partitioner contract —
+events for slot ``s`` are stored only under partition ``h_p(s)`` — makes
+the shard's result exact on its owned slots; the gather step stitches the
+owned slots of every shard into one state, bit-identical to unsharded
+execution (``tests/test_sharded.py`` differences both against the replay
+oracle).
+
+Execution is scheduled through the fault layer: a
+:class:`~repro.runtime.fault.StragglerMitigator` hands shard tasks to a
+pool of :class:`~repro.runtime.executor.HostExecutor` threads, hedges the
+oldest outstanding task onto idle workers when the tail is short (first
+completion wins, per-task duplicate cap), requeues a failed task to a
+survivor, and marks the failing worker dead so the next query's
+``elastic_replan`` routes around it.  The JAX backend's shard-parallel
+path (``shard_map`` over the word_cyclic ``[P, Wp]`` layout, zero
+collectives) lives in :mod:`repro.runtime.jax_exec`; this module is the
+host-pool engine that serves ``serve.py --shards N``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable
+
+import numpy as np
+
+from ..core.query import NO_ATTRS, AttrOptions
+from .executor import HostExecutor
+from .fault import (FetchTask, HeartbeatTracker, StragglerMitigator,
+                    elastic_replan, retry)
+
+
+class ShardExecutionError(RuntimeError):
+    """A shard task failed on every attempt (primary, hedges, requeues)."""
+
+
+class ShardedRetriever:
+    """Scatter/execute/gather engine over a pool of host executors.
+
+    Transport-agnostic like the rest of the fault layer: "workers" are
+    named logical shard servers driven by local threads, so unit tests and
+    benchmarks can inject latency or death deterministically through
+    ``shard_hook`` — a real deployment would wire the same scheduling to
+    its RPC layer.
+
+    * ``workers`` — worker count or explicit names.
+    * ``hedge_frac`` / ``max_hedges`` / ``hedge_delay_s`` — hedging
+      policy: once remaining work is down to the outstanding tail, idle
+      threads duplicate the oldest outstanding shard task (at most
+      ``max_hedges`` duplicates per task, each issued only after the
+      primary has been running ``hedge_delay_s``); first completion wins.
+    * ``task_retries`` — how often a *failed* shard task is requeued to a
+      survivor before the query fails; the failing worker is marked dead
+      so the next query replans without it.
+    * ``io_retries`` — bounded exponential backoff around each shard
+      execution for transient store faults (:func:`fault.retry`).
+    """
+
+    def __init__(self, gm, workers: int | list[str] = 4, *,
+                 threads: int | None = None,
+                 hedge_frac: float = 0.5, max_hedges: int = 1,
+                 hedge_delay_s: float = 0.01, hedge_workers: int = 1,
+                 task_retries: int = 1, io_retries: int = 2,
+                 heartbeat_timeout: float = 10.0,
+                 use_prefetcher: bool = False,
+                 poll_s: float = 0.002,
+                 shard_hook: Callable[[str, tuple[int, ...]], None] | None
+                 = None) -> None:
+        if isinstance(workers, int):
+            workers = [f"shard{i}" for i in range(max(1, workers))]
+        self.gm = gm
+        self.workers = list(workers)
+        self.heartbeats = HeartbeatTracker(self.workers,
+                                           timeout=heartbeat_timeout)
+        self.hedge_frac = float(hedge_frac)
+        self.max_hedges = int(max_hedges)
+        self.hedge_delay_s = float(hedge_delay_s)
+        self.hedge_workers = int(hedge_workers)
+        self.task_retries = int(task_retries)
+        self.io_retries = max(1, int(io_retries))
+        self.use_prefetcher = bool(use_prefetcher)
+        self.poll_s = float(poll_s)
+        self.shard_hook = shard_hook
+        n = len(self.workers) + self.hedge_workers
+        self._pool = ThreadPoolExecutor(
+            max_workers=threads if threads is not None else 4 * n,
+            thread_name_prefix="shard")
+        self._lock = threading.Lock()
+        self.hedges_total = 0
+        self.requeues_total = 0
+        self.last_stats: dict[str, Any] = {}
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ShardedRetriever":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- assignment
+    def alive_workers(self) -> list[str]:
+        alive = set(self.heartbeats.alive())
+        out = [w for w in self.workers if w in alive]
+        # a fully-dead fleet can't serve; fall back to every configured
+        # worker rather than failing closed (their next success re-beats)
+        return out or list(self.workers)
+
+    def assignment(self, P: int) -> dict[str, tuple[int, ...]]:
+        """Current ``worker -> owned partitions`` map over alive workers."""
+        by_worker: dict[str, list[int]] = {}
+        for p, w in elastic_replan(P, self.alive_workers()).items():
+            by_worker.setdefault(w, []).append(p)
+        return {w: tuple(sorted(ps)) for w, ps in by_worker.items()}
+
+    # ------------------------------------------------------------ execution
+    def execute(self, dg, plan, options: AttrOptions = NO_ATTRS,
+                pool=None) -> dict[Any, Any]:
+        """Execute one plan IR sharded; returns states keyed by the plan's
+        targets, bit-identical to ``dg.execute(plan, ...)``."""
+        t_start = time.perf_counter()
+        parts_by_worker = self.assignment(dg.P)
+        if len(parts_by_worker) <= 1:
+            # one owner for every partition: sharded execution degenerates
+            # to the plain host path (no scatter/gather overhead)
+            out = dg.execute(plan, options, pool=pool,
+                             prefetch=self.gm.prefetcher
+                             if self.use_prefetcher else None)
+            self.last_stats = {"shards": 1, "hedges": 0, "requeues": 0}
+            return out
+        from ..api.compiler import scatter_plans
+        shard_irs = scatter_plans([plan], parts_by_worker, dg.P)
+
+        per_shard = self._run_scattered(dg, shard_irs, parts_by_worker,
+                                        options, pool)
+        out = self._gather(dg, per_shard, parts_by_worker)
+        dg._record_workload(plan, options, t_start)
+        return out
+
+    def retrieve(self, times, options: AttrOptions = NO_ATTRS,
+                 use_current: bool = True) -> dict[int, Any]:
+        """Convenience: plan + execute one multipoint retrieval against the
+        manager's current index."""
+        dg = self.gm.dg
+        times = [int(t) for t in dict.fromkeys(int(t) for t in times)]
+        plan = dg.plan_multipoint(times, options, use_current)
+        return self.execute(dg, plan, options, pool=self.gm.pool)
+
+    # -- scheduling through the fault layer ---------------------------------
+    def _run_scattered(self, dg, shard_irs: dict[str, Any],
+                       parts_by_worker: dict[str, tuple[int, ...]],
+                       options: AttrOptions, pool) -> dict[str, tuple]:
+        prefetcher = self.gm.prefetcher if self.use_prefetcher else None
+        tasks = [FetchTask(partition=i, key=w,
+                           size_est=max(1, len(parts_by_worker[w])))
+                 for i, w in enumerate(shard_irs)]
+        sm = StragglerMitigator(tasks, hedge_frac=self.hedge_frac,
+                                max_duplicates=self.max_hedges)
+        lock = threading.Lock()
+        done_evt = threading.Event()
+        started: dict[str, float] = {}
+        fails: dict[str, int] = {}
+        results: dict[str, Any] = {}
+        errors: dict[str, BaseException] = {}
+        requeues = [0]
+
+        def run_one(worker: str):
+            if self.shard_hook is not None:
+                self.shard_hook(worker, parts_by_worker[worker])
+            ex = HostExecutor(dg, prefetcher=prefetcher)
+            return ex.run(shard_irs[worker], options, pool)
+
+        def loop() -> None:
+            while True:
+                with lock:
+                    if sm.finished():
+                        done_evt.set()
+                        return
+                    task = sm.assign()
+                    is_hedge = task is not None and task.key in started
+                    if task is not None and not is_hedge:
+                        started[task.key] = time.perf_counter()
+                if task is None:
+                    time.sleep(self.poll_s)
+                    continue
+                if is_hedge and self.hedge_delay_s > 0:
+                    wait = (started[task.key] + self.hedge_delay_s
+                            - time.perf_counter())
+                    if wait > 0:
+                        time.sleep(wait)
+                    with lock:
+                        if task.key in sm.done:   # primary won meanwhile
+                            continue
+                try:
+                    res = retry(lambda: run_one(task.key),
+                                attempts=self.io_retries,
+                                retryable=(IOError, TimeoutError))
+                except Exception as e:
+                    with lock:
+                        fails[task.key] = fails.get(task.key, 0) + 1
+                        # a failed shard reads as dead until it completes
+                        # something again: the next query replans around it
+                        self.heartbeats.mark_dead(task.key)
+                        if (fails[task.key] <= self.task_retries
+                                and sm.fail(task.key)):
+                            requeues[0] += 1
+                            continue
+                        errors.setdefault(task.key, e)
+                        sm.complete(task.key)
+                        if sm.finished():
+                            done_evt.set()
+                    continue
+                with lock:
+                    self.heartbeats.beat(task.key)
+                    if sm.complete(task.key):
+                        results[task.key] = res
+                    if sm.finished():
+                        done_evt.set()
+
+        n_loops = len(tasks) + (self.hedge_workers if self.max_hedges else 0)
+        for _ in range(n_loops):
+            self._pool.submit(loop)
+        # wait for the *task set*, not the threads: an abandoned attempt
+        # whose hedge already won (first completion) keeps draining in the
+        # persistent pool — joining it would hand the straggler's latency
+        # right back to the query, defeating the hedge
+        done_evt.wait()
+
+        with self._lock:
+            self.hedges_total += sm.duplicates
+            self.requeues_total += requeues[0]
+            self.last_stats = {"shards": len(tasks),
+                               "hedges": sm.duplicates,
+                               "requeues": requeues[0]}
+        if errors:
+            worker, err = next(iter(errors.items()))
+            raise ShardExecutionError(
+                f"shard task for worker {worker!r} failed after "
+                f"{fails.get(worker, 0)} attempt(s)") from err
+        return {w: (parts_by_worker[w], results[w]) for w in results}
+
+    # ----------------------------------------------------------------- gather
+    def _gather(self, dg, per_shard: dict[str, tuple],
+                parts_by_worker: dict[str, tuple[int, ...]]) -> dict:
+        """Union the per-shard states on their owned slots.
+
+        Each shard's state is exact on the slots whose partition it owns
+        and possibly stale elsewhere, and ownership tiles the slot space,
+        so overwriting every shard's owned slots into one state
+        reconstructs the unsharded result exactly."""
+        items = list(per_shard.items())
+        base_worker, (base_parts, base_states) = items[0]
+        out = {}
+        hp_cache: dict[int, np.ndarray] = {}
+
+        def hp(size: int) -> np.ndarray:
+            a = hp_cache.get(size)
+            if a is None:
+                a = dg._hp(np.arange(size, dtype=np.int64), dg.P)
+                hp_cache[size] = a
+            return a
+
+        for tgt, st0 in base_states.items():
+            combined = st0.copy()
+            for worker, (parts, states) in items[1:]:
+                st = states[tgt]
+                pa = np.asarray(parts, np.int32)
+                # sizes can differ only if a live ingest grew the universe
+                # mid-execution; the overlap is the consistent region
+                kn = min(combined.node_mask.size, st.node_mask.size)
+                sel = np.isin(hp(kn), pa)
+                combined.node_mask[:kn][sel] = st.node_mask[:kn][sel]
+                if combined.node_attrs.size and st.node_attrs.size:
+                    ka = min(kn, combined.node_attrs.shape[0],
+                             st.node_attrs.shape[0])
+                    combined.node_attrs[:ka][sel[:ka]] = \
+                        st.node_attrs[:ka][sel[:ka]]
+                ke = min(combined.edge_mask.size, st.edge_mask.size)
+                sele = np.isin(hp(ke), pa)
+                combined.edge_mask[:ke][sele] = st.edge_mask[:ke][sele]
+                if combined.edge_attrs.size and st.edge_attrs.size:
+                    ka = min(ke, combined.edge_attrs.shape[0],
+                             st.edge_attrs.shape[0])
+                    combined.edge_attrs[:ka][sele[:ka]] = \
+                        st.edge_attrs[:ka][sele[:ka]]
+            out[tgt] = combined
+        return out

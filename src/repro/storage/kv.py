@@ -689,18 +689,43 @@ class PartitionedKV(KVStore):
     ``stats`` aggregates the per-backend counters on read — the router
     keeps no counters of its own, so traffic that reaches a backend
     directly (a partition-local reader, a prefetch thread pinned to one
-    storage unit) is never under-reported."""
+    storage unit) is never under-reported.
 
-    def __init__(self, parts: list[KVStore]) -> None:
+    ``partitioner`` selects the backend for a partition id: a registered
+    name from :mod:`repro.runtime.partition` (``"mod_hash"`` /
+    ``"word_cyclic"``) or any ``(ids, P) -> backend indices`` callable, so
+    the store's routing and the planner's shard assignment come from the
+    same registry.  ``None`` (the default) keeps the legacy
+    ``partition_id % len(parts)`` routing — stores written by earlier
+    deployments stay readable."""
+
+    def __init__(self, parts: list[KVStore], *,
+                 partitioner=None) -> None:
         self.parts = parts
         self._agg = AggregateKVStats(parts)
+        if isinstance(partitioner, str):
+            from ..runtime.partition import get_partitioner
+            partitioner = get_partitioner(partitioner)
+        self._partitioner = partitioner
+        # partition ids are small ints drawn from a fixed range; memoize
+        # so routing stays a dict hit, not an ndarray round-trip per call
+        self._route_memo: dict[int, int] = {}
 
     @property
     def stats(self) -> AggregateKVStats:
         return self._agg
 
     def _route(self, key: Key) -> KVStore:
-        return self.parts[key[0] % len(self.parts)]
+        pid = key[0]
+        if self._partitioner is None:
+            return self.parts[pid % len(self.parts)]
+        idx = self._route_memo.get(pid)
+        if idx is None:
+            import numpy as np
+            idx = int(self._partitioner(np.asarray([pid], np.int64),
+                                        len(self.parts))[0])
+            self._route_memo[pid] = idx
+        return self.parts[idx]
 
     def get(self, key: Key) -> bytes:
         return self._route(key).get(key)

@@ -21,6 +21,8 @@ counterexamples.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import pytest
 
@@ -34,6 +36,12 @@ CHUNK = 25          # seeds per parametrized case (progress + isolation)
 ALGO_EVERY = 20     # PageRank/CC differential on every 20th example
                     # (fixpoint solvers jit-compile per universe shape —
                     # masks stay cheap, so they carry the 200-example sweep)
+
+# REPRO_SHARDS=N (N > 1) re-runs the whole sweep with the history stored
+# in N mod_hash partitions and a fifth backend — the sharded scatter/
+# gather retriever — differenced against the same replay oracle.  CI's
+# smoke job runs the suite once unsharded and once at --shards 4.
+SHARDS = int(os.environ.get("REPRO_SHARDS", "1"))
 
 
 def _case_times(rng, gm, ev) -> list[int]:
@@ -54,9 +62,14 @@ def _build(seed: int) -> tuple:
     n_events = int(rng.integers(40, 120))
     uni, ev = random_history(n_events, seed,
                              max_time_step=int(rng.integers(1, 3)))
+    kw = {}
+    if SHARDS > 1:
+        kw = dict(num_partitions=SHARDS, partition_fn="mod_hash")
     gm = GraphManager(uni, ev, L=int(rng.choice([8, 16, 32])),
                       k=int(rng.choice([2, 3])), cache_bytes=0,
-                      prefetch_workers=0)
+                      prefetch_workers=0, **kw)
+    if SHARDS > 1:
+        gm.enable_sharding(SHARDS)
     return rng, uni, ev, gm
 
 
@@ -72,14 +85,20 @@ def _check_masks(seed: int) -> None:
     dev = evolve_intervals_jax(gm.dg, [times[:cut], times[cut - 1:]],
                                pool=gm.pool)
     dev_flat = {t: m for d in dev for t, m in d.items()}
+    shd = (gm.sharded.execute(gm.dg, ir, NO_ATTRS, pool=gm.pool)
+           if gm.sharded is not None else None)
 
     for i, t in enumerate(times):
         truth = replay(uni, ev, t)
-        for name, (nm, em) in (
-                ("host", (host[t].node_mask, host[t].edge_mask)),
-                ("jax", jx[t]),
-                ("incremental", inc.values[i]),
-                ("jax-interval", dev_flat[t])):
+        backends = [
+            ("host", (host[t].node_mask, host[t].edge_mask)),
+            ("jax", jx[t]),
+            ("incremental", inc.values[i]),
+            ("jax-interval", dev_flat[t])]
+        if shd is not None:
+            backends.append(("sharded", (shd[t].node_mask,
+                                         shd[t].edge_mask)))
+        for name, (nm, em) in backends:
             assert np.array_equal(nm, truth.node_mask), (seed, t, name)
             assert np.array_equal(em, truth.edge_mask), (seed, t, name)
     gm.close()

@@ -1,0 +1,173 @@
+"""Regression tests for the fault layer (`runtime/fault.py`) — the bugs
+these pin down were dormant until the sharded retriever started driving
+the layer on every query:
+
+* ``retry(attempts=0)`` used to raise ``UnboundLocalError`` (raising an
+  unbound ``last``) instead of rejecting the nonsensical bound;
+* ``KeyError`` used to be in the default retryable set, turning every
+  missing-blob routing bug into a multi-attempt backoff stall;
+* ``StragglerMitigator.assign`` used to hand the *same* outstanding task
+  to every idle worker, unboundedly — N idle workers would all duplicate
+  one fetch.
+"""
+from __future__ import annotations
+
+import traceback
+
+import pytest
+
+from repro.runtime.fault import (FetchTask, HeartbeatTracker,
+                                 StragglerMitigator, elastic_replan, retry)
+
+
+# ---------------------------------------------------------------------------
+# retry
+# ---------------------------------------------------------------------------
+
+def test_retry_rejects_nonpositive_attempts():
+    with pytest.raises(ValueError, match="attempts"):
+        retry(lambda: 1, attempts=0)
+    with pytest.raises(ValueError, match="attempts"):
+        retry(lambda: 1, attempts=-3)
+
+
+def test_retry_keyerror_not_retried():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise KeyError("missing blob")
+
+    with pytest.raises(KeyError):
+        retry(fn, attempts=5, sleep=lambda s: None)
+    assert len(calls) == 1, "a routing bug must fail fast, not back off"
+
+
+def test_retry_backoff_and_success():
+    sleeps = []
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert retry(fn, attempts=4, base_delay=0.01,
+                 sleep=sleeps.append) == "ok"
+    assert len(calls) == 3
+    assert sleeps == [0.01, 0.02]     # exponential, none after success
+
+
+def test_retry_exhaustion_preserves_traceback():
+    def inner():
+        raise TimeoutError("store timed out")
+
+    sleeps = []
+    with pytest.raises(TimeoutError) as ei:
+        retry(inner, attempts=3, sleep=sleeps.append)
+    # 3 attempts -> 2 backoffs; the re-raise keeps the original frame
+    assert len(sleeps) == 2
+    frames = traceback.extract_tb(ei.value.__traceback__)
+    assert any(f.name == "inner" for f in frames)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMitigator hedging
+# ---------------------------------------------------------------------------
+
+def _drain_fresh(sm):
+    """Assign until only hedges remain; returns the fresh keys."""
+    out = []
+    while sm.remaining():
+        out.append(sm.assign().key)
+    return out
+
+
+def test_hedge_duplicates_bounded_per_task():
+    # 3 outstanding tasks, 10 idle workers: each task may be duplicated
+    # at most once, and different idle workers hedge *different* tasks
+    tasks = [FetchTask(p, f"k{p}", size_est=1) for p in range(3)]
+    sm = StragglerMitigator(tasks, hedge_frac=1.0, max_duplicates=1)
+    fresh = _drain_fresh(sm)
+    assert sorted(fresh) == ["k0", "k1", "k2"]
+    hedged = []
+    for _ in range(10):                    # 10 idle workers ask for work
+        t = sm.assign()
+        if t is not None:
+            hedged.append(t.key)
+    assert sorted(hedged) == ["k0", "k1", "k2"], \
+        "idle workers must spread hedges across tasks, one dup each"
+    assert sm.duplicates == 3
+
+
+def test_hedge_prefers_oldest_assigned():
+    tasks = [FetchTask(p, f"k{p}", size_est=1) for p in range(3)]
+    sm = StragglerMitigator(tasks, hedge_frac=1.0, max_duplicates=2)
+    order = _drain_fresh(sm)
+    # first hedge goes to the longest-outstanding (first-assigned) task
+    assert sm.assign().key == order[0]
+    sm.complete(order[0])
+    assert sm.assign().key == order[1]
+
+
+def test_hedge_zero_duplicates_disables_hedging():
+    tasks = [FetchTask(0, "k0", size_est=1)]
+    sm = StragglerMitigator(tasks, hedge_frac=1.0, max_duplicates=0)
+    assert sm.assign().key == "k0"
+    assert sm.assign() is None
+    assert sm.duplicates == 0
+
+
+def test_complete_first_wins_and_fail_requeues():
+    tasks = [FetchTask(0, "k0", size_est=1), FetchTask(1, "k1", size_est=1)]
+    sm = StragglerMitigator(tasks, hedge_frac=0.0)
+    a = sm.assign()
+    assert sm.complete(a.key) is True
+    assert sm.complete(a.key) is False     # hedge finishing second
+    b = sm.assign()
+    assert sm.fail(b.key) is True          # requeued for a survivor
+    assert not sm.finished()
+    b2 = sm.assign()
+    assert b2.key == b.key
+    assert sm.complete(b2.key) is True
+    assert sm.fail(b2.key) is False        # already done: no requeue
+    assert sm.finished()
+
+
+# ---------------------------------------------------------------------------
+# elastic replan stability
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_workers", [3, 5, 9])
+def test_elastic_replan_moves_only_dead_workers_partitions(n_workers):
+    workers = [f"w{i}" for i in range(n_workers)]
+    before = elastic_replan(64, workers)
+    for dead in workers:
+        survivors = [w for w in workers if w != dead]
+        after = elastic_replan(64, survivors)
+        assert set(after) == set(range(64))
+        assert dead not in after.values()
+        for p, w in before.items():
+            if w != dead:
+                # consistent hashing: survivors keep their partitions
+                assert after[p] == w, (dead, p)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat boundary
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_boundary_exactly_timeout():
+    clock = [0.0]
+    hb = HeartbeatTracker(["a"], timeout=5.0, clock=lambda: clock[0])
+    clock[0] = 5.0                     # elapsed == timeout: still alive
+    assert hb.alive() == ["a"] and hb.dead() == []
+    clock[0] = 5.0 + 1e-9              # just past: dead
+    assert hb.alive() == [] and hb.dead() == ["a"]
+    hb.beat("a")
+    assert hb.alive() == ["a"]
+    hb.mark_dead("a")
+    assert hb.dead() == ["a"]
+    hb.beat("a")                       # a fresh beat revives
+    assert hb.alive() == ["a"]

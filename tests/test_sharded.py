@@ -1,0 +1,250 @@
+"""Sharded multi-worker retrieval: scatter/execute/gather correctness and
+the fault-layer behaviors it activates.
+
+The core property (differenced below against both the unsharded host
+path and the brute-force replay oracle): a shard executing the same plan
+DAG with its Fetch nodes restricted to its owned storage partitions is
+exact on its owned slots, so the gather step's slot-wise union is
+**bit-identical** to unsharded execution — masks and attributes, for
+every registered partitioner.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import GraphManager, replay
+from repro.core.query import NO_ATTRS, parse_attr_options
+from repro.data.generators import random_history
+from repro.runtime.partition import get_partitioner
+from repro.runtime.shard import ShardedRetriever, ShardExecutionError
+
+
+def _gm(seed: int, P: int, fn: str = "mod_hash", **kw) -> tuple:
+    uni, ev = random_history(int(np.random.default_rng(seed)
+                                 .integers(60, 140)), seed)
+    gm = GraphManager(uni, ev, L=16, k=2, cache_bytes=0,
+                      prefetch_workers=0, num_partitions=P,
+                      partition_fn=fn, **kw)
+    return uni, ev, gm
+
+
+def _times(ev, seed: int, n: int = 5) -> list[int]:
+    tmax = int(ev.time[-1]) if len(ev) else 0
+    rng = np.random.default_rng(seed + 1)
+    ts = sorted({int(t) for t in rng.integers(0, tmax + 2, n)} | {tmax})
+    return ts
+
+
+# ---------------------------------------------------------------------------
+# differential: sharded == unsharded == replay, masks + attrs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn,P,W", [("mod_hash", 4, 4),
+                                    ("mod_hash", 3, 5),
+                                    ("word_cyclic", 4, 2)])
+def test_sharded_bit_identical(fn, P, W):
+    for seed in (3, 11):
+        uni, ev, gm = _gm(seed, P, fn)
+        opts = parse_attr_options("+node:all+edge:all", uni)
+        times = _times(ev, seed)
+        with ShardedRetriever(gm, W, hedge_delay_s=0.0) as sr:
+            sharded = sr.retrieve(times, opts)
+        oracle = gm.dg.get_snapshots(times, opts, pool=gm.pool)
+        for t in times:
+            truth = replay(uni, ev, t)
+            assert np.array_equal(sharded[t].node_mask, truth.node_mask)
+            assert np.array_equal(sharded[t].edge_mask, truth.edge_mask)
+            assert oracle[t].equal(sharded[t]), (seed, t)
+        gm.close()
+
+
+def test_sharded_through_query_service():
+    """``enable_sharding`` routes ``QueryService.retrieve_points`` through
+    the shard pool; results and cache behavior stay identical."""
+    uni, ev, gm = _gm(5, 4)
+    times = _times(ev, 5)
+    gm.enable_sharding(4)
+    got = gm.get_snapshots(times)
+    assert gm.sharded.last_stats["shards"] >= 1
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(got[t].node_mask, truth.node_mask)
+        assert np.array_equal(got[t].edge_mask, truth.edge_mask)
+    gm.disable_sharding()
+    assert gm.sharded is None
+    gm.close()
+
+
+def test_single_worker_degenerates_to_host_path():
+    uni, ev, gm = _gm(9, 4)
+    times = _times(ev, 9)
+    with ShardedRetriever(gm, 1) as sr:
+        out = sr.retrieve(times)
+        assert sr.last_stats == {"shards": 1, "hedges": 0, "requeues": 0}
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(out[t].node_mask, truth.node_mask)
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# plan scattering
+# ---------------------------------------------------------------------------
+
+def test_scatter_ir_restricts_fetches_and_splits_cost():
+    from repro.core.planir import Fetch, scatter_ir
+    uni, ev, gm = _gm(21, 4)
+    ir = gm.dg.plan_multipoint(_times(ev, 21), NO_ATTRS, True)
+    shards = {"a": (0, 1), "b": (2, 3)}
+    out = scatter_ir(ir, shards, total_parts=4)
+    assert set(out) == {"a", "b"}
+    for shard, parts in shards.items():
+        sir = out[shard]
+        assert sir.targets == ir.targets
+        assert len(sir.nodes) == len(ir.nodes)
+        for n in sir.nodes:
+            if isinstance(n.op, Fetch):
+                assert n.op.parts == parts
+        assert np.isclose(sir.total_weight, ir.total_weight / 2)
+    gm.close()
+
+
+def test_scatter_plans_merges_per_shard():
+    from repro.api.compiler import scatter_plans
+    from repro.core.planir import Fetch
+    uni, ev, gm = _gm(22, 4)
+    ts = _times(ev, 22, 8)
+    cut = len(ts) // 2
+    irs = [gm.dg.plan_multipoint(ts[:cut], NO_ATTRS, True),
+           gm.dg.plan_multipoint(ts[cut:], NO_ATTRS, True)]
+    out = scatter_plans(irs, {"a": (0, 2), "b": (1, 3)}, 4)
+    for shard, parts in (("a", (0, 2)), ("b", (1, 3))):
+        merged = out[shard]
+        assert set(merged.targets) == set(ts)
+        for n in merged.nodes:
+            if isinstance(n.op, Fetch):
+                assert n.op.parts == parts
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# PartitionedKV routing
+# ---------------------------------------------------------------------------
+
+def test_partitioned_kv_routing_matches_registry():
+    from repro.storage.kv import MemKV, PartitionedKV
+    parts = [MemKV() for _ in range(3)]
+    kv = PartitionedKV(parts, partitioner="mod_hash")
+    hp = get_partitioner("mod_hash")
+    for pid in range(64):
+        kv.put((pid, 0, "s"), b"x")
+        want = int(hp(np.asarray([pid], np.int64), 3)[0])
+        assert (pid, 0, "s") in parts[want], pid
+    # default keeps the legacy modulo routing (old stores stay readable)
+    legacy_parts = [MemKV() for _ in range(3)]
+    legacy = PartitionedKV(legacy_parts)
+    for pid in range(16):
+        legacy.put((pid, 0, "s"), b"y")
+        assert (pid, 0, "s") in legacy_parts[pid % 3]
+
+
+# ---------------------------------------------------------------------------
+# fault behaviors through the retriever
+# ---------------------------------------------------------------------------
+
+def test_transient_worker_failure_requeues_and_recovers():
+    uni, ev, gm = _gm(31, 6)
+    times = _times(ev, 31)
+    victim = []
+    failed = threading.Event()
+
+    def hook(worker, parts):
+        if not victim:
+            victim.append(worker)
+        if worker == victim[0] and not failed.is_set():
+            failed.set()
+            raise IOError("injected shard fault")
+
+    with ShardedRetriever(gm, 3, io_retries=1, task_retries=1,
+                          hedge_delay_s=0.0, shard_hook=hook) as sr:
+        out = sr.retrieve(times)
+        assert sr.requeues_total == 1
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(out[t].node_mask, truth.node_mask)
+        assert np.array_equal(out[t].edge_mask, truth.edge_mask)
+    gm.close()
+
+
+def test_permanent_worker_failure_raises_after_retries():
+    uni, ev, gm = _gm(32, 8)
+    times = _times(ev, 32)
+    victim = []
+
+    def hook(worker, parts):
+        if not victim:
+            victim.append(worker)
+        if worker == victim[0]:
+            raise IOError("shard is gone")
+
+    with ShardedRetriever(gm, 3, io_retries=1, task_retries=1,
+                          hedge_delay_s=0.0, max_hedges=0,
+                          shard_hook=hook) as sr:
+        assert len(sr.assignment(gm.dg.P)) > 1
+        with pytest.raises(ShardExecutionError):
+            sr.retrieve(times)
+        # the failed worker reads dead: the next assignment excludes it
+        # and moves only its partitions (consistent hashing)
+        assert victim[0] not in sr.alive_workers()
+        after = sr.assignment(gm.dg.P)
+        assert victim[0] not in after
+    gm.close()
+
+
+def test_dead_worker_moves_only_its_partitions():
+    uni, ev, gm = _gm(33, 16)
+    with ShardedRetriever(gm, ["w0", "w1", "w2", "w3"]) as sr:
+        before = sr.assignment(16)
+        owner = {p: w for w, ps in before.items() for p in ps}
+        dead = next(iter(before))
+        sr.heartbeats.mark_dead(dead)
+        after = sr.assignment(16)
+        assert dead not in after
+        assert sorted(p for ps in after.values() for p in ps) == list(range(16))
+        for w, ps in after.items():
+            for p in ps:
+                if owner[p] != dead:
+                    assert owner[p] == w, (p, dead)
+        # still serves correct results without the dead worker
+        times = _times(ev, 33, 3)
+        out = sr.retrieve(times)
+        for t in times:
+            truth = replay(uni, ev, t)
+            assert np.array_equal(out[t].node_mask, truth.node_mask)
+    gm.close()
+
+
+def test_hedged_fetch_beats_straggler():
+    uni, ev, gm = _gm(34, 6)
+    times = _times(ev, 34)
+    first = threading.Event()
+
+    def hook(worker, parts):
+        # exactly the first attempt overall stalls; the hedge duplicate of
+        # the same shard task is a later invocation and runs fast
+        if not first.is_set():
+            first.set()
+            time.sleep(0.25)
+
+    with ShardedRetriever(gm, 3, hedge_frac=1.0, max_hedges=1,
+                          hedge_delay_s=0.01, shard_hook=hook) as sr:
+        out = sr.retrieve(times)
+        assert sr.hedges_total >= 1
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(out[t].node_mask, truth.node_mask)
+    gm.close()
