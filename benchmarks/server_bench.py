@@ -1,0 +1,418 @@
+"""BENCH_server: the concurrent SLO-aware query server under load.
+
+Closed- and open-loop Zipf snapshot traffic from ~1k short-lived client
+sessions (waves of concurrent connections) against one
+:class:`~repro.launch.server.QueryServer`, all over real sockets.  Four
+acceptance gates (checked into the report as ``gates``):
+
+* ``cobatch_qps``     — cross-client co-batching (batching window on)
+  delivers >= 1.5x the aggregate closed-loop QPS of ``window=0`` at
+  equal KV budget (same store, same per-get cost, same worker count);
+* ``p99_bounded``     — open-loop at 2x measured capacity, admission
+  control sheds enough load that the p99 of *admitted* requests stays
+  < 3x the pre-saturation (0.5x capacity) p99 instead of melting down;
+* ``deadline_no_kv``  — deadline-rejected requests consume zero KV gets;
+* ``no_cross_wiring`` — a differential session oracle: every envelope
+  answers exactly its session's request (correlation id, request order)
+  and is bit-identical (CRCs) to a direct single-client execution.
+
+``--smoke`` is the CI contract: boot the socket server, fire a
+200-request mixed Zipf burst over concurrent sessions, require every
+envelope valid and no leaked threads or fds, print ``SMOKE_OK``.
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.server_bench --quick
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+
+from repro.api.document import Q
+from repro.core import GraphManager
+from repro.data.generators import churn_network
+from repro.launch.server import QueryServer
+
+from .shard_bench import LatencyKV, MemKV
+
+OUT_JSON = "BENCH_server.json"
+GET_LATENCY_US = 300.0    # simulated per-get remote RTT (equal everywhere)
+ZIPF = 1.2
+DISTINCT_TIMES = 64
+WINDOW_MS = 6.0           # generous window: closed-loop waves merge fully
+WORKERS = 4
+ADMIT_MS = 25.0           # drain horizon for the saturation runs
+
+
+def _build(n_events: int, seed: int = 7):
+    uni, ev = churn_network(n_initial_edges=max(n_events // 12, 50),
+                            n_events=n_events, seed=seed)
+    store = LatencyKV(MemKV(), GET_LATENCY_US * 1e-6)
+    # async KV prefetch stays ON: merged multipoint plans overlap their
+    # fetches; single-point documents cannot — that asymmetry is the
+    # multi-query optimization the co-batching gate measures
+    gm = GraphManager(uni, ev, store=store, L=max(n_events // 40, 64),
+                      k=2, diff_fn="intersection", cache_bytes=0)
+    return gm
+
+
+def _zipf_times(tmax: int, seed: int = 3) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.integers(0, tmax + 1, DISTINCT_TIMES))
+
+
+def _draw(times: np.ndarray, rng) -> int:
+    rank = min(int(rng.zipf(ZIPF)), times.size)
+    return int(times[times.size - rank])
+
+
+def _oracle(gm, times: np.ndarray) -> dict:
+    out = {}
+    for t in np.unique(times):
+        r = gm.query.run(Q.at(int(t)).build()).to_dict()["result"]
+        out[int(t)] = (r["nodes"], r["edges"], r["node_crc"],
+                       r["edge_crc"])
+    return out
+
+
+def _check(env: dict, rid: str, oracle: dict) -> str | None:
+    if env.get("id") != rid:
+        return f"cross-wired: sent {rid}, got {env.get('id')}"
+    if not env.get("ok"):
+        return f"{rid}: {env.get('error')}"
+    t = int(rid.rsplit("t", 1)[1])
+    r = env["result"]
+    if (r["nodes"], r["edges"], r["node_crc"], r["edge_crc"]) != oracle[t]:
+        return f"{rid}: payload differs from direct execution"
+    return None
+
+
+# --------------------------------------------------------------- closed loop
+
+
+def _closed_loop(srv: QueryServer, times: np.ndarray, oracle: dict, *,
+                 concurrency: int, sessions_per_worker: int,
+                 reqs_per_session: int) -> dict:
+    """Waves of short-lived sessions: ``concurrency`` live connections,
+    each worker thread running ``sessions_per_worker`` connect/query/
+    disconnect cycles — ~concurrency x sessions_per_worker simulated
+    clients total.  Every response is validated against the differential
+    oracle."""
+    errors: list[str] = []
+    lats: list[float] = []
+    lock = threading.Lock()
+
+    def worker(wid: int) -> None:
+        rng = np.random.default_rng(1000 + wid)
+        my_lats, my_errs = [], []
+        for s in range(sessions_per_worker):
+            sock = socket.create_connection((srv.host, srv.port))
+            f = sock.makefile("rw", encoding="utf-8", newline="\n")
+            for i in range(reqs_per_session):
+                t = _draw(times, rng)
+                rid = f"w{wid}s{s}r{i}t{t}"
+                t0 = time.perf_counter()
+                f.write(json.dumps({"kind": "snapshot", "t": t,
+                                    "id": rid}) + "\n")
+                f.flush()
+                env = json.loads(f.readline())
+                my_lats.append(time.perf_counter() - t0)
+                err = _check(env, rid, oracle)
+                if err:
+                    my_errs.append(err)
+            f.close()
+            sock.close()
+        with lock:
+            lats.extend(my_lats)
+            errors.extend(my_errs)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(concurrency)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    arr = np.sort(np.asarray(lats)) * 1e3
+    return {"requests": len(lats), "qps": len(lats) / wall,
+            "wall_s": wall, "p50_ms": float(np.percentile(arr, 50)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "errors": errors[:10], "n_errors": len(errors),
+            "sessions": concurrency * sessions_per_worker}
+
+
+# ----------------------------------------------------------------- open loop
+
+
+def _open_loop(srv: QueryServer, times: np.ndarray, oracle: dict, *,
+               rate_qps: float, duration_s: float,
+               connections: int = 8) -> dict:
+    """Paced open-loop traffic: senders fire pipelined requests at a
+    global target rate regardless of completions; per-connection readers
+    record latencies.  Admitted (ok) and shed (overloaded) envelopes are
+    tallied separately — the SLO story is the p99 of the *admitted*."""
+    stop = threading.Event()
+    ok_lats: list[float] = []
+    shed = [0]
+    errors: list[str] = []
+    lock = threading.Lock()
+
+    def connection(cid: int) -> None:
+        sock = socket.create_connection((srv.host, srv.port))
+        f = sock.makefile("rw", encoding="utf-8", newline="\n")
+        sent: dict[str, float] = {}
+        pending = []
+        rng = np.random.default_rng(2000 + cid)
+        per_conn = rate_qps / connections
+        gap = 1.0 / max(per_conn, 1e-9)
+        n = 0
+        t_start = time.perf_counter()
+
+        def drain(block: bool) -> None:
+            while pending:
+                if not block:
+                    # only reap what is already buffered
+                    sock.setblocking(False)
+                    try:
+                        peek = f.readline()
+                    except (BlockingIOError, OSError):
+                        sock.setblocking(True)
+                        return
+                    sock.setblocking(True)
+                else:
+                    peek = f.readline()
+                if not peek:
+                    return
+                env = json.loads(peek)
+                rid = pending.pop(0)
+                now = time.perf_counter()
+                with lock:
+                    if env.get("id") != rid:
+                        errors.append(f"cross-wired {rid}")
+                    elif env.get("ok"):
+                        ok_lats.append(now - sent[rid])
+                    elif env["error"]["kind"] in ("overloaded",
+                                                  "deadline"):
+                        shed[0] += 1
+                    else:
+                        errors.append(f"{rid}: {env['error']}")
+
+        while not stop.is_set():
+            t = _draw(times, rng)
+            rid = f"c{cid}n{n}t{t}"
+            sent[rid] = time.perf_counter()
+            pending.append(rid)
+            f.write(json.dumps({"kind": "snapshot", "t": t,
+                                "id": rid}) + "\n")
+            f.flush()
+            n += 1
+            drain(block=False)
+            sleep = t_start + n * gap - time.perf_counter()
+            if sleep > 0:
+                time.sleep(sleep)
+        drain(block=True)
+        f.close()
+        sock.close()
+
+    threads = [threading.Thread(target=connection, args=(c,))
+               for c in range(connections)]
+    for th in threads:
+        th.start()
+    time.sleep(duration_s)
+    stop.set()
+    for th in threads:
+        th.join(timeout=60)
+    arr = (np.sort(np.asarray(ok_lats)) * 1e3 if ok_lats
+           else np.asarray([float("inf")]))
+    total = len(ok_lats) + shed[0]
+    return {"offered_qps": rate_qps, "admitted": len(ok_lats),
+            "shed": shed[0],
+            "shed_frac": shed[0] / max(total, 1),
+            "admitted_p50_ms": float(np.percentile(arr, 50)),
+            "admitted_p99_ms": float(np.percentile(arr, 99)),
+            "errors": errors[:10], "n_errors": len(errors)}
+
+
+# ------------------------------------------------------------------ deadlines
+
+
+def _deadline_probe(gm, srv: QueryServer, times: np.ndarray) -> dict:
+    """Fire expired-deadline requests at an idle server: every one must
+    come back as a typed ``deadline`` envelope with zero KV gets."""
+    sock = socket.create_connection((srv.host, srv.port))
+    f = sock.makefile("rw", encoding="utf-8", newline="\n")
+    g0 = gm.store.stats.gets
+    n = 50
+    rejected = 0
+    for i in range(n):
+        t = int(times[i % times.size])
+        env_ = {"kind": "snapshot", "t": t, "deadline_ms": 1e-4,
+                "id": f"d{i}"}
+        f.write(json.dumps(env_) + "\n")
+        f.flush()
+        env = json.loads(f.readline())
+        rejected += (not env["ok"]
+                     and env["error"]["kind"] == "deadline")
+    gets = gm.store.stats.gets - g0
+    f.close()
+    sock.close()
+    return {"requests": n, "rejected": rejected, "kv_gets": int(gets)}
+
+
+# ------------------------------------------------------------------ the bench
+
+
+def bench_server(quick: bool = False):
+    n_events = 3_000 if quick else 10_000
+    concurrency = 16 if quick else 32
+    spw = 4 if quick else 32          # sessions per worker (~1k total full)
+    rps = 6                           # requests per session
+    open_s = 2.0 if quick else 5.0
+
+    gm = _build(n_events)
+    times = _zipf_times(int(gm.epochs.current_data.max_time))
+    oracle = _oracle(gm, times)
+    report: dict = {"n_events": n_events,
+                    "kv_get_latency_us": GET_LATENCY_US,
+                    "zipf": ZIPF, "distinct_times": DISTINCT_TIMES,
+                    "workers": WORKERS, "window_ms": WINDOW_MS}
+
+    # ---- closed loop: co-batching window vs window=0, equal KV budget --
+    closed = {}
+    for label, window in (("window0", 0.0), ("cobatch", WINDOW_MS)):
+        with QueryServer(gm, window_ms=window, workers=WORKERS,
+                         admit_horizon_ms=0.0) as srv:
+            closed[label] = _closed_loop(
+                srv, times, oracle, concurrency=concurrency,
+                sessions_per_worker=spw, reqs_per_session=rps)
+            closed[label]["scheduler"] = srv.scheduler.snapshot_stats()
+    report["closed_loop"] = closed
+    speedup = closed["cobatch"]["qps"] / closed["window0"]["qps"]
+    report["cobatch_speedup"] = speedup
+
+    # ---- open loop: probe capacity, then 0.5x vs 2x ---------------------
+    # capacity is the sustained *admitted* rate under a deliberate
+    # overload (closed-loop QPS is latency-bound, not the ceiling)
+    with QueryServer(gm, window_ms=WINDOW_MS, workers=WORKERS,
+                     admit_horizon_ms=ADMIT_MS) as srv:
+        probe = _open_loop(srv, times, oracle,
+                           rate_qps=6.0 * closed["cobatch"]["qps"],
+                           duration_s=open_s)
+    capacity = probe["admitted"] / open_s
+    report["capacity_probe"] = {**probe, "capacity_qps": capacity}
+
+    open_runs = {}
+    for label, frac in (("half_capacity", 0.5), ("twice_capacity", 2.0)):
+        with QueryServer(gm, window_ms=WINDOW_MS, workers=WORKERS,
+                         admit_horizon_ms=ADMIT_MS) as srv:
+            open_runs[label] = _open_loop(
+                srv, times, oracle, rate_qps=capacity * frac,
+                duration_s=open_s)
+            open_runs[label]["admit_horizon_ms"] = ADMIT_MS
+    report["open_loop"] = open_runs
+    pre_p99 = open_runs["half_capacity"]["admitted_p99_ms"]
+    sat = open_runs["twice_capacity"]
+
+    # ---- deadlines ------------------------------------------------------
+    with QueryServer(gm, window_ms=WINDOW_MS, workers=WORKERS) as srv:
+        report["deadline"] = _deadline_probe(gm, srv, times)
+
+    wiring_errors = (closed["window0"]["n_errors"]
+                     + closed["cobatch"]["n_errors"]
+                     + probe["n_errors"]
+                     + sum(r["n_errors"] for r in open_runs.values()))
+    report["gates"] = {
+        "cobatch_qps": speedup >= 1.5,
+        "p99_bounded": (sat["admitted_p99_ms"] < 3.0 * pre_p99
+                        and sat["shed"] > 0),
+        "deadline_no_kv": (report["deadline"]["kv_gets"] == 0
+                           and report["deadline"]["rejected"]
+                           == report["deadline"]["requests"]),
+        "no_cross_wiring": wiring_errors == 0,
+    }
+    gm.close()
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    us = 1e6 / max(closed["cobatch"]["qps"], 1e-9)
+    yield ("server_closed_loop", us,
+           {"json": OUT_JSON, "qps_cobatch": round(closed["cobatch"]["qps"]),
+            "qps_window0": round(closed["window0"]["qps"]),
+            "speedup": round(speedup, 2),
+            "sessions": closed["cobatch"]["sessions"],
+            **report["gates"]})
+    yield ("server_open_loop_2x",
+           sat["admitted_p99_ms"] * 1e3,
+           {"admitted_p99_ms": round(sat["admitted_p99_ms"], 2),
+            "pre_p99_ms": round(pre_p99, 2),
+            "shed_frac": round(sat["shed_frac"], 3)})
+
+
+# --------------------------------------------------------------------- smoke
+
+
+def smoke() -> int:
+    """CI: boot the socket server, 200-request mixed Zipf burst over
+    concurrent sessions, every envelope valid, no leaked threads/fds."""
+    import os
+
+    gm = _build(2_000)
+    times = _zipf_times(int(gm.epochs.current_data.max_time))
+    oracle = _oracle(gm, times)
+    fd_dir = "/proc/self/fd"
+    have_fds = os.path.isdir(fd_dir)
+    threads0 = threading.active_count()
+    fds0 = len(os.listdir(fd_dir)) if have_fds else 0
+
+    srv = QueryServer(gm, window_ms=WINDOW_MS, workers=2).start()
+    res = _closed_loop(srv, times, oracle, concurrency=8,
+                       sessions_per_worker=5, reqs_per_session=5)
+    dl = _deadline_probe(gm, srv, times)
+    stats = srv.scheduler.snapshot_stats()
+    srv.close()
+    gm.close()  # kv-prefetch workers spawn lazily mid-burst; close before
+    time.sleep(0.3)  # sampling or they read as a server leak
+
+    threads1 = threading.active_count()
+    fds1 = len(os.listdir(fd_dir)) if have_fds else 0
+
+    failures = []
+    if res["n_errors"]:
+        failures.append(f"invalid envelopes: {res['errors']}")
+    if res["requests"] != 200:
+        failures.append(f"expected 200 requests, ran {res['requests']}")
+    if dl["kv_gets"] != 0 or dl["rejected"] != dl["requests"]:
+        failures.append(f"deadline probe: {dl}")
+    if threads1 > threads0:
+        failures.append(f"leaked threads: {threads0} -> {threads1}")
+    if have_fds and fds1 > fds0:
+        failures.append(f"leaked fds: {fds0} -> {fds1}")
+    print(json.dumps({"requests": res["requests"], "qps": round(res["qps"]),
+                      "co_batched_docs": stats["co_batched_docs"],
+                      "deadline": dl, "threads": [threads0, threads1],
+                      "fds": [fds0, fds1]}, sort_keys=True))
+    if failures:
+        print("SMOKE_FAIL " + "; ".join(failures))
+        return 1
+    print("SMOKE_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    for name, us, derived in bench_server(quick=args.quick):
+        print(f"{name},{us:.1f},{json.dumps(derived)}")

@@ -18,8 +18,14 @@ kind                    fields
 Common fields: ``attrs`` (an attr_options spec string, Table 1),
 ``use_current`` (may the planner route through the live current graph),
 ``no_cache`` (consistency hint: bypass the snapshot cache), ``reply``
-(``"summary"`` or ``"full"`` result payload on the wire), ``v`` (schema
-version, currently 1).
+(``"summary"``, ``"full"``, or — under the socket server — ``"lease"``:
+overlay the result in the GraphPool and return lease gids instead of
+slot lists), ``id`` (opaque client correlation token, echoed verbatim in
+the result envelope — the cross-wiring oracle under concurrent serving),
+``deadline_ms`` (SLO budget from arrival; the scheduler rejects the
+request with a typed ``deadline`` error envelope once the planner's cost
+estimate says it cannot be met — see ``api/scheduler.py``), ``v``
+(schema version, currently 1).
 
 ``GraphQuery.from_dict`` / :meth:`GraphQuery.to_dict` round-trip the JSON
 form losslessly (property-tested in ``tests/test_api.py``); malformed
@@ -57,7 +63,8 @@ _KIND_FIELDS = {
     "interval": ("ts", "te"),
     "evolve": ("times", "op", "op_kwargs", "incremental"),
 }
-_COMMON_FIELDS = ("attrs", "use_current", "no_cache", "reply")
+_COMMON_FIELDS = ("attrs", "use_current", "no_cache", "reply", "id",
+                  "deadline_ms")
 _ALL_FIELDS = ("kind", "v", "t", "times", "ts", "te", "expr", "op",
                "op_kwargs", "incremental") + _COMMON_FIELDS
 
@@ -93,6 +100,8 @@ class GraphQuery:
     reply: str = "summary"
     v: int = SCHEMA_VERSION
     incremental: bool = True
+    id: Any = None
+    deadline_ms: float | None = None
 
     def __post_init__(self) -> None:
         # normalize so that equality and the JSON round-trip are canonical
@@ -149,13 +158,31 @@ class GraphQuery:
         if self.kind != "evolve" and self.incremental is not True:
             raise DocumentError("field 'incremental' only applies to "
                                 "evolve documents", position="incremental")
-        if self.reply not in ("summary", "full"):
-            raise DocumentError(f"'reply' must be 'summary' or 'full', "
-                                f"got {self.reply!r}", position="reply")
+        if self.reply not in ("summary", "full", "lease"):
+            raise DocumentError(f"'reply' must be 'summary', 'full' or "
+                                f"'lease', got {self.reply!r}",
+                                position="reply")
+        if self.reply == "lease" and self.kind not in ("snapshot",
+                                                       "multipoint", "expr"):
+            raise DocumentError(f"reply='lease' only applies to state-"
+                                f"returning kinds, not {self.kind!r}",
+                                position="reply")
         for f in ("use_current", "no_cache", "incremental"):
             if not isinstance(getattr(self, f), bool):
                 raise DocumentError(f"field {f!r} must be a boolean",
                                     position=f)
+        if self.id is not None and not isinstance(self.id, (str, int)):
+            raise DocumentError("'id' must be a string or integer",
+                                position="id")
+        if isinstance(self.id, bool):
+            raise DocumentError("'id' must be a string or integer",
+                                position="id")
+        if self.deadline_ms is not None:
+            d = self.deadline_ms
+            if isinstance(d, bool) or not isinstance(d, (int, float)) \
+                    or not d > 0:
+                raise DocumentError("'deadline_ms' must be a positive "
+                                    "number", position="deadline_ms")
         return self
 
     # -- serialization ------------------------------------------------------
@@ -187,7 +214,7 @@ class GraphQuery:
                 val = list(val)
             out[f] = val
         defaults = {"attrs": "", "use_current": True, "no_cache": False,
-                    "reply": "summary"}
+                    "reply": "summary", "id": None, "deadline_ms": None}
         for f, dflt in defaults.items():
             if getattr(self, f) != dflt:
                 out[f] = getattr(self, f)
@@ -271,6 +298,22 @@ class _Builder:
     def full(self) -> "_Builder":
         """Request the full (slot-list) result payload on the wire."""
         return self._set(reply="full")
+
+    def lease(self) -> "_Builder":
+        """Request a GraphPool lease instead of a payload: the server
+        overlays the retrieved snapshot(s) and returns lease gids the
+        session holds (and must ``release``) — see ``launch/server.py``."""
+        return self._set(reply="lease")
+
+    def tag(self, id: str | int) -> "_Builder":
+        """Attach a client correlation ``id``, echoed in the envelope."""
+        return self._set(id=id)
+
+    def deadline(self, ms: float) -> "_Builder":
+        """SLO budget in milliseconds from arrival; the serving scheduler
+        sheds the request with a ``deadline`` error envelope rather than
+        executing it late (``api/scheduler.py``)."""
+        return self._set(deadline_ms=float(ms))
 
     def compute(self, op: Any, *, incremental: bool = True,
                 **op_kwargs: Any) -> "_Builder":

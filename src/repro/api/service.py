@@ -133,12 +133,19 @@ class QueryResult:
 
     def to_dict(self) -> dict:
         if not self.ok:
-            return {"v": 1, "ok": False, "kind": self.kind,
-                    "error": self.error.to_dict()}
-        full = bool(self.query is not None and self.query.reply == "full")
-        return {"v": 1, "ok": True, "kind": self.kind,
-                "result": self._payload(full),
-                "stats": _jsonable(self.stats, False)}
+            out = {"v": 1, "ok": False, "kind": self.kind,
+                   "error": self.error.to_dict()}
+        else:
+            full = bool(self.query is not None
+                        and self.query.reply == "full")
+            out = {"v": 1, "ok": True, "kind": self.kind,
+                   "result": self._payload(full),
+                   "stats": _jsonable(self.stats, False)}
+        # correlation id echo (cross-wiring oracle under concurrent
+        # serving): every envelope names the request it answers
+        if self.query is not None and self.query.id is not None:
+            out["id"] = self.query.id
+        return out
 
     def to_json(self) -> str:
         import json
@@ -311,6 +318,50 @@ class QueryService:
         q = doc if isinstance(doc, GraphQuery) else None
         return QueryResult(kind, False, None, {}, error=err, query=q)
 
+    def run_group(self, compiled: Sequence[CompiledQuery], *,
+                  on_error: str = "envelope") -> list[QueryResult]:
+        """Execute co-plannable compiled documents (same
+        :attr:`CompiledQuery.point_group`) as **one** merged retrieval:
+        their timepoints union into one Steiner plan, then each document
+        finishes from the shared states.  Response ordering is pinned to
+        input order.  Failure isolation: a retrieval failure fails every
+        member (the plan was shared), but a ``finish`` failure — one
+        poisoned document — yields an error envelope for that document
+        *only*, without dropping its groupmates' results.  Group stats are
+        shared (``merged_docs`` / union ``targets``); each envelope also
+        carries its own ``doc_targets`` attribution."""
+        times = list(dict.fromkeys(
+            t for cq in compiled for t in cq.point_times))
+        try:
+            clock = _StatClock(self.gm.store)
+            cq0 = compiled[0]
+            with self.gm.epochs.acquire() as pin:
+                states, rstats = self.retrieve_points(
+                    times, cq0.options, cq0.doc.use_current,
+                    cq0.doc.no_cache, pin=pin)
+                stats = {**clock.done(), **rstats,
+                         "targets": len(times),
+                         "merged_docs": len(compiled)}
+                results: list[QueryResult] = []
+                for cq in compiled:
+                    try:
+                        value = cq.finish(self, states, dg=pin.data.dg)
+                    except Exception as e:
+                        if on_error == "raise":
+                            raise
+                        results.append(self._error_result(cq.doc, e))
+                        continue
+                    results.append(QueryResult(
+                        cq.kind, True, value,
+                        dict(stats,
+                             doc_targets=len(cq.point_times)),
+                        query=cq.doc))
+                return results
+        except Exception as e:
+            if on_error == "raise":
+                raise
+            return [self._error_result(cq.doc, e) for cq in compiled]
+
     def run_batch(self, docs: Sequence[GraphQuery], *,
                   on_error: str = "raise") -> list[QueryResult]:
         """Execute a batch of documents, merging co-plannable point
@@ -341,29 +392,10 @@ class QueryService:
             else:
                 groups.setdefault(key, []).append(i)
         for idxs in groups.values():
-            times = list(dict.fromkeys(
-                t for i in idxs for t in compiled[i].point_times))
-            try:
-                clock = _StatClock(self.gm.store)
-                cq0 = compiled[idxs[0]]
-                with self.gm.epochs.acquire() as pin:
-                    states, rstats = self.retrieve_points(
-                        times, cq0.options, cq0.doc.use_current,
-                        cq0.doc.no_cache, pin=pin)
-                    stats = {**clock.done(), **rstats,
-                             "targets": len(times),
-                             "merged_docs": len(idxs)}
-                    for i in idxs:
-                        results[i] = QueryResult(
-                            compiled[i].kind, True,
-                            compiled[i].finish(self, states,
-                                               dg=pin.data.dg),
-                            dict(stats), query=compiled[i].doc)
-            except Exception as e:
-                if on_error == "raise":
-                    raise
-                for i in idxs:
-                    results[i] = self._error_result(docs[i], e)
+            group_res = self.run_group([compiled[i] for i in idxs],
+                                       on_error=on_error)
+            for i, res in zip(idxs, group_res):
+                results[i] = res
         for i in solo:
             try:
                 results[i] = self._execute(compiled[i])

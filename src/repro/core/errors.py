@@ -72,3 +72,28 @@ class ExecutionError(QueryError, RuntimeError):
     underlying exception (``__cause__``) for the wire envelope."""
 
     code = "execution"
+
+
+class DeadlineError(QueryError, TimeoutError):
+    """A request carrying ``deadline_ms`` cannot meet it: either it
+    expired while queued, or the planner's decode-aware cost estimate for
+    its retrieval already exceeds the remaining budget.  Raised *before*
+    execution — a deadline-rejected request performs no KV gets."""
+
+    code = "deadline"
+
+
+class OverloadedError(QueryError, RuntimeError):
+    """Admission control shed this request: queued work (queue depth x
+    estimated plan cost) exceeds the scheduler's drain-horizon capacity.
+    Clients should back off and retry."""
+
+    code = "overloaded"
+
+
+class BackpressureError(QueryError, RuntimeError):
+    """The session holds too many in-flight pooled snapshots (``lease``
+    replies) against its GraphPool byte budget; release leases (or
+    disconnect) before issuing more queries."""
+
+    code = "backpressure"

@@ -210,12 +210,18 @@ class GraphManager:
                  else (dg.leaf_time[-1] if dg.leaf_pos[-1] > 0 else NO_TIME))
         self.epochs = EpochRegistry(EpochData(dg, dg._total_events, max_t))
         self._ingest = None
+        self._closed = False
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
-        """Shut down the prefetch thread pool (idempotent; threads only
-        exist if a batched retrieval ran) and any store this manager
-        created itself (flushes disk-backed tiers)."""
+        """Shut down every worker this manager owns — the ingest pipeline,
+        the shard-worker pool, the prefetch thread pool — and any store it
+        created itself (flushes disk-backed tiers).  Idempotent: a second
+        close is a no-op, and retrievals issued after close degrade to the
+        synchronous unprefetched path instead of respawning threads."""
+        if self._closed:
+            return
+        self._closed = True
         if self._ingest is not None:
             self._ingest.close()
             self._ingest = None
@@ -225,8 +231,13 @@ class GraphManager:
         if self.prefetcher is not None:
             # drain in-flight fetches before the store's handles go away
             self.prefetcher.close(wait=self._owns_store)
+            self.prefetcher = None
         if self._owns_store:
             self.store.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def __enter__(self) -> "GraphManager":
         return self

@@ -4,7 +4,13 @@
   JSON :class:`~repro.api.document.GraphQuery` documents in (stdin or
   ``--input``), JSON :class:`~repro.api.service.QueryResult` envelopes
   out, with co-batched documents merged into one Steiner plan
-  (``--doc-batch``) — the request-serving front end;
+  (``--doc-batch``) — the documented ``--port 0`` stdin fallback of the
+  socket server, sharing its SessionCore code path;
+* ``--mode server`` — the concurrent socket front end
+  (launch/server.py): NDJSON sessions over TCP, cross-client co-batching
+  inside a ``--window-ms`` window, deadline admission control
+  (``--admit-ms``), GraphPool leases with per-session byte budgets and
+  backpressure (``--session-mb``);
 * ``--mode snapshots`` — historical-snapshot traffic against a
   GraphManager with the workload-aware materialization advisor + snapshot
   cache enabled (the paper's retrieval service, core/materialize.py);
@@ -140,57 +146,39 @@ def serve_snapshots(n_events: int, budget_mb: float, queries: int,
         s.close()
 
 
-def run_query_documents(gm, lines: Iterable[str],
-                        batch: int = 8) -> Iterator[str]:
-    """The wire loop: parse each NDJSON line into a GraphQuery, execute
-    groups of up to ``batch`` documents through ``QueryService.run_batch``
+def run_query_documents(gm, lines: Iterable[str], batch: int = 8,
+                        scheduler=None) -> Iterator[str]:
+    """The stdin wire loop: parse each NDJSON line into a GraphQuery,
+    execute groups of up to ``batch`` documents as one scheduler wave
     (co-plannable documents share one merged Steiner plan), and yield one
     JSON envelope per input line, in input order.  A malformed line
-    yields an error envelope; it never poisons its batch."""
-    from ..api.document import GraphQuery
-    from ..api.service import QueryService
+    yields an error envelope; it never poisons its batch.
 
-    svc = gm.query
+    This is the same :class:`~repro.launch.server.SessionCore` code path
+    the socket server (``--mode server``) drives per connection — one
+    parse / control / lease / envelope implementation for both
+    transports.  Pass ``scheduler`` to share a live server's scheduler;
+    by default a private synchronous one is created and closed here."""
+    from ..api.scheduler import BatchingScheduler
+    from .server import SessionCore, run_session_lines
 
-    def flush(chunk: list[tuple[int, object]]) -> list[str]:
-        # chunk rows are (slot, GraphQuery) or (slot, ready envelope str)
-        docs = [(i, d) for i, d in chunk if isinstance(d, GraphQuery)]
-        out: dict[int, str] = {i: d for i, d in chunk
-                               if not isinstance(d, GraphQuery)}
-        results = svc.run_batch([d for _, d in docs], on_error="envelope")
-        for (i, _), res in zip(docs, results):
-            out[i] = res.to_json()
-        return [out[i] for i, _ in chunk]
-
-    chunk: list[tuple[int, object]] = []
-    slot = 0
-    for line in lines:
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            item: object = GraphQuery.from_json(line)
-        except Exception as e:
-            item = QueryService._error_result(None, e).to_json()
-        chunk.append((slot, item))
-        slot += 1
-        if len(chunk) >= batch:
-            yield from flush(chunk)
-            chunk = []
-    if chunk:
-        yield from flush(chunk)
+    sched = scheduler or BatchingScheduler(gm.query, window_ms=0.0,
+                                           workers=1)
+    core = SessionCore(gm, sched)
+    try:
+        yield from run_session_lines(core, lines, batch=batch)
+    finally:
+        core.release_all()
+        if scheduler is None:
+            sched.close()
 
 
-def serve_query(n_events: int, batch: int, input_path: str | None,
-                seed: int = 0, codec: str = "v2", kv: str = "mem",
-                kv_dir: str | None = None, hot_mb: float = 8.0,
-                budget_mb: float = 0.0, shards: int = 1) -> None:
-    """Real request serving: NDJSON GraphQuery documents in, JSON
-    QueryResult envelopes out (stdout stays pure NDJSON; the summary goes
-    to stderr).  ``--advisor-mb > 0`` also enables the materialization
-    advisor under that GraphPool budget.  ``--shards N > 1`` stores the
-    history in N mod_hash partitions and serves retrievals through N
-    shard workers (scatter/gather with hedged fetches)."""
+def _build_query_gm(n_events: int, seed: int, codec: str, kv: str,
+                    kv_dir: str | None, hot_mb: float, budget_mb: float,
+                    shards: int):
+    """Shared GraphManager construction for the query / server front
+    ends: synthetic churn history, optional disk-backed store tier,
+    advisor budget and shard workers."""
     import os as _os
 
     from ..core import GraphManager
@@ -215,6 +203,22 @@ def serve_query(n_events: int, batch: int, input_path: str | None,
         gm.enable_advisor(budget_bytes=int(budget_mb * 2**20))
     if shards > 1:
         gm.enable_sharding(shards)
+    return gm, store, ev
+
+
+def serve_query(n_events: int, batch: int, input_path: str | None,
+                seed: int = 0, codec: str = "v2", kv: str = "mem",
+                kv_dir: str | None = None, hot_mb: float = 8.0,
+                budget_mb: float = 0.0, shards: int = 1) -> None:
+    """Real request serving over stdin (the documented ``--port 0``
+    fallback): NDJSON GraphQuery documents in, JSON QueryResult envelopes
+    out (stdout stays pure NDJSON; the summary goes to stderr).
+    ``--advisor-mb > 0`` also enables the materialization advisor under
+    that GraphPool budget.  ``--shards N > 1`` stores the history in N
+    mod_hash partitions and serves retrievals through N shard workers
+    (scatter/gather with hedged fetches)."""
+    gm, store, ev = _build_query_gm(n_events, seed, codec, kv, kv_dir,
+                                    hot_mb, budget_mb, shards)
     print(f"ready: {n_events} events, tmax={int(ev.time[-1])}, "
           f"doc-batch={batch}"
           + (f", shards={shards}" if shards > 1 else ""),
@@ -244,6 +248,53 @@ def serve_query(n_events: int, batch: int, input_path: str | None,
               f"kv: {st.gets} gets, {st.bytes_read / 2**20:.2f} MiB"
               + shard_note,
               file=sys.stderr, flush=True)
+        gm.close()
+        if store is not None:
+            store.close()
+
+
+def serve_server(n_events: int, port: int, seed: int = 0,
+                 codec: str = "v2", kv: str = "mem",
+                 kv_dir: str | None = None, hot_mb: float = 8.0,
+                 budget_mb: float = 0.0, shards: int = 1,
+                 window_ms: float = 2.0, workers: int = 4,
+                 admit_ms: float = 250.0, session_mb: float | None = None,
+                 serve_s: float = 0.0) -> None:
+    """The concurrent socket front end (``--mode server``): one
+    :class:`~repro.launch.server.QueryServer` accepting NDJSON sessions,
+    co-batching co-plannable documents across clients inside a
+    ``--window-ms`` batching window, with deadline admission control and
+    lease-budget backpressure (see launch/server.py).  Prints one
+    ``SERVER_READY host=... port=...`` line to stdout once bound (the
+    subprocess-harness contract), serves until SIGINT or ``--serve-s``
+    elapses, then prints ``SERVER_STATS <json>``."""
+    import json as _json
+
+    from .server import QueryServer
+
+    gm, store, ev = _build_query_gm(n_events, seed, codec, kv, kv_dir,
+                                    hot_mb, budget_mb, shards)
+    srv = QueryServer(gm, port=port, window_ms=window_ms, workers=workers,
+                      admit_horizon_ms=admit_ms,
+                      session_lease_mb=session_mb)
+    srv.start()
+    print(f"ready: {n_events} events, tmax={int(ev.time[-1])}, "
+          f"window={window_ms}ms workers={workers}",
+          file=sys.stderr, flush=True)
+    print(f"SERVER_READY host={srv.host} port={srv.port}", flush=True)
+    try:
+        if serve_s > 0:
+            time.sleep(serve_s)
+        else:
+            while True:
+                time.sleep(1.0)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        stats = srv.stats()
+        srv.close()
+        print("SERVER_STATS " + _json.dumps(stats, sort_keys=True),
+              flush=True)
         gm.close()
         if store is not None:
             store.close()
@@ -470,7 +521,7 @@ def serve_din(batch: int) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("model", "snapshots", "evolve",
-                                       "query", "ingest"),
+                                       "query", "ingest", "server"),
                     default="model")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
@@ -511,6 +562,25 @@ def main() -> None:
                     help="query mode: partition the history into this many "
                          "mod_hash shards and serve retrievals through a "
                          "shard-worker pool (1 = unsharded)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="server mode: TCP port to bind (0 in query mode "
+                         "= the documented stdin fallback; 0 in server "
+                         "mode = an ephemeral OS-assigned port, read it "
+                         "from the SERVER_READY line)")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="server mode: co-batching window — arrivals "
+                         "within it merge into one cross-client plan")
+    ap.add_argument("--server-workers", type=int, default=4,
+                    help="server mode: scheduler execution threads")
+    ap.add_argument("--admit-ms", type=float, default=250.0,
+                    help="server mode: admission horizon — shed new work "
+                         "when the queue drain estimate exceeds this")
+    ap.add_argument("--session-mb", type=float, default=None,
+                    help="server mode: per-session lease byte budget "
+                         "(default: derived from pool/store budgets)")
+    ap.add_argument("--serve-s", type=float, default=0.0,
+                    help="server mode: serve for this many seconds then "
+                         "exit (0 = until SIGINT)")
     ap.add_argument("--duration", type=float, default=30.0,
                     help="ingest mode: seconds to pace the live event "
                          "stream over")
@@ -527,7 +597,14 @@ def main() -> None:
                              "masks"),
                     help="evolve mode: incremental operator")
     args = ap.parse_args()
-    if args.mode == "query":
+    if args.mode == "server" or (args.mode == "query" and args.port > 0):
+        serve_server(args.events, args.port, codec=args.codec,
+                     kv=args.kv, kv_dir=args.kv_dir, hot_mb=args.hot_mb,
+                     budget_mb=args.advisor_mb, shards=args.shards,
+                     window_ms=args.window_ms, workers=args.server_workers,
+                     admit_ms=args.admit_ms, session_mb=args.session_mb,
+                     serve_s=args.serve_s)
+    elif args.mode == "query":
         serve_query(args.events, args.doc_batch, args.input,
                     codec=args.codec, kv=args.kv, kv_dir=args.kv_dir,
                     hot_mb=args.hot_mb, budget_mb=args.advisor_mb,

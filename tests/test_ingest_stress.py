@@ -180,3 +180,94 @@ def test_forced_rollover_storm_with_batches():
     assert not errors, errors[:10]
     assert pipe.rollovers >= 5
     gm.close()
+
+
+def test_socket_sessions_pin_epochs_during_ingest():
+    """Satellite of the serving tentpole: N NDJSON *socket* sessions
+    query through the concurrent server while the ingest pipeline commits
+    groups and forces rollovers.  Every envelope must be bit-identical
+    (mask + attr CRCs) to the replay oracle at its own pinned
+    ``epoch_events`` prefix, and must answer its session's request
+    (correlation id) in order."""
+    import json
+    import socket
+
+    from repro.api.service import _crc
+    from repro.launch.server import QueryServer
+
+    uni, ev = random_history(N_TOTAL, 47)
+    gm = GraphManager(uni, ev[:N_BUILD], L=L, k=2)
+    pipe = IngestPipeline(gm, group_events=32, group_window_s=0.002,
+                          threaded=True)
+    gm._ingest = pipe
+    tmax = int(ev.time.max()) + 2
+    srv = QueryServer(gm, window_ms=2.0, workers=3).start()
+
+    n_sessions = 4
+    errors: list[str] = []
+    checks = [0] * n_sessions
+    stop = threading.Event()
+
+    def session(idx: int) -> None:
+        rng = np.random.default_rng(300 + idx)
+        sock = socket.create_connection((srv.host, srv.port))
+        f = sock.makefile("rw", encoding="utf-8", newline="\n")
+        try:
+            while not stop.is_set():
+                t = int(rng.integers(0, tmax))
+                rid = f"s{idx}-{checks[idx]}"
+                f.write(json.dumps({"kind": "snapshot", "t": t,
+                                    "attrs": ATTRS, "id": rid}) + "\n")
+                f.flush()
+                env = json.loads(f.readline())
+                if not env.get("ok"):
+                    errors.append(f"{rid}: {env.get('error')}")
+                    break
+                if env.get("id") != rid:
+                    errors.append(f"{rid}: cross-wired to {env.get('id')}")
+                    break
+                ne = env["stats"]["epoch_events"]
+                want = replay(uni, ev[:ne], t)
+                got = env["result"]
+                if (got["nodes"], got["edges"]) != \
+                        (int(want.node_mask.sum()),
+                         int(want.edge_mask.sum())):
+                    errors.append(f"{rid} ne={ne}: counts mismatch")
+                elif (got["node_crc"] != _crc(np.packbits(want.node_mask))
+                      or got["edge_crc"]
+                      != _crc(np.packbits(want.edge_mask))):
+                    errors.append(f"{rid} ne={ne}: mask crc mismatch")
+                elif got["attr_crc"] != (_crc(want.node_attrs)
+                                         ^ _crc(want.edge_attrs)):
+                    errors.append(f"{rid} ne={ne}: attr crc mismatch")
+                checks[idx] += 1
+        finally:
+            f.close()
+            sock.close()
+
+    sessions = [threading.Thread(target=session, args=(i,))
+                for i in range(n_sessions)]
+    for s in sessions:
+        s.start()
+    try:
+        rng = np.random.default_rng(2)
+        i = N_BUILD
+        while i < N_TOTAL:
+            j = min(N_TOTAL, i + int(rng.integers(5, 40)))
+            pipe.submit(ev[i:j])
+            i = j
+            time.sleep(0.001)
+        pipe.drain(timeout=60)
+    finally:
+        stop.set()
+        for s in sessions:
+            s.join(timeout=30)
+        srv.close()
+
+    assert not errors, errors[:10]
+    assert all(c > 0 for c in checks), checks
+    assert pipe.rollovers > 0, "never exercised a rollover under serving"
+    # every session pin released once the server is down
+    est = gm.epochs.stats()
+    assert est["current_refs"] == 0 and est["retired_pending"] == 0, est
+    gm.close()

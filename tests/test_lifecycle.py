@@ -1,0 +1,114 @@
+"""Explicit lifecycle: create/close loops must not leak threads.
+
+Every worker a GraphManager owns — the prefetch pool, shard workers, the
+threaded ingest pipeline — and everything the query server stacks on top
+(scheduler dispatcher + executor pool, per-session reader/writer
+threads) must be joined by ``close()``, and ``close()`` must be
+idempotent.  The load-bearing assertion is a *stable thread count*
+across repeated create/use/close cycles.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.api.document import Q
+from repro.core.ingest import IngestPipeline
+from repro.core.manager import GraphManager
+from repro.data.generators import churn_network
+
+
+def _settled_thread_count(deadline_s: float = 5.0) -> int:
+    """Thread count once it stops changing (daemon teardown can lag a
+    beat behind ``join`` returning)."""
+    last = threading.active_count()
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline_s:
+        time.sleep(0.05)
+        cur = threading.active_count()
+        if cur == last:
+            return cur
+        last = cur
+    return last
+
+
+@pytest.fixture(scope="module")
+def history():
+    return churn_network(n_initial_edges=80, n_events=1200, seed=3)
+
+
+def test_manager_create_close_loop_stable_threads(history):
+    uni, ev = history
+    base = _settled_thread_count()
+    for i in range(3):
+        gm = GraphManager(uni, ev, L=64, k=2, diff_fn="intersection")
+        # exercise the lazy prefetch pool (batched retrieval spawns it)
+        gm.get_snapshots([10, 40, 80, 120])
+        gm.close()
+        assert gm.closed
+        gm.close()                      # idempotent
+        assert _settled_thread_count() == base, f"leak on cycle {i}"
+
+
+def test_manager_close_with_sharding_and_ingest(history):
+    uni, ev = history
+    base = _settled_thread_count()
+    for i in range(2):
+        gm = GraphManager(uni, ev[:800], L=48, k=2,
+                          diff_fn="intersection", num_partitions=2,
+                          partition_fn="mod_hash")
+        gm.enable_sharding(2)
+        gm._ingest = IngestPipeline(gm, group_events=64, threaded=True)
+        gm._ingest.submit(ev[800:1000])
+        gm._ingest.drain(timeout=30.0)
+        gm.get_snapshots([10, 50, 90])
+        gm.close()
+        assert gm._ingest is None and gm.sharded is None
+        assert gm.prefetcher is None
+        assert _settled_thread_count() == base, f"leak on cycle {i}"
+
+
+def test_manager_context_manager(history):
+    uni, ev = history
+    with GraphManager(uni, ev, L=64, k=2) as gm:
+        st = gm.get_snapshot(100)
+        assert st.node_mask.any()
+    assert gm.closed
+
+
+def test_queries_after_close_degrade_gracefully(history):
+    """Post-close retrieval must not respawn worker threads."""
+    uni, ev = history
+    gm = GraphManager(uni, ev, L=64, k=2)
+    gm.get_snapshots([10, 40])
+    gm.close()
+    base = _settled_thread_count()
+    st = gm.get_snapshots([10, 40, 80])
+    assert len(st) == 3
+    assert _settled_thread_count() == base
+    gm.close()
+
+
+def test_server_create_close_loop_stable_threads(history):
+    import json
+    import socket
+
+    from repro.launch.server import QueryServer
+
+    uni, ev = history
+    gm = GraphManager(uni, ev, L=64, k=2)
+    base = _settled_thread_count()
+    for i in range(3):
+        srv = QueryServer(gm, window_ms=1.0, workers=2).start()
+        with socket.create_connection((srv.host, srv.port)) as s:
+            f = s.makefile("rw", encoding="utf-8", newline="\n")
+            f.write(Q.at(50).build().to_json() + "\n")
+            f.flush()
+            env = json.loads(f.readline())
+            assert env["ok"]
+        srv.close()
+        srv.close()                     # idempotent
+        assert _settled_thread_count() == base, f"leak on cycle {i}"
+    gm.close()

@@ -244,3 +244,48 @@ def test_wire_loop_subprocess():
     assert len(env["result"]["points"]) == 2
     assert env["stats"]["kv_gets"] > 0
     assert "served 1 documents (1 ok)" in proc.stderr
+
+
+def test_poisoned_document_fails_alone_in_merged_group(churn, monkeypatch):
+    """A merged group containing a document that fails *after* the shared
+    retrieval (at finish) returns an error envelope for that document
+    only — ordering pinned to input order, the survivors keep the shared
+    plan's stats with per-document attribution."""
+    import repro.api.compiler as compiler_mod
+
+    uni, ev = churn
+    with GraphManager(uni, ev, L=100, k=2, cache_bytes=0) as g:
+        ts = _times(ev, 100, 500, 900)
+        docs = [Q.at(ts[0]).build(),
+                Q.expr("t0 | t1", ts[:2]).build(),   # poisoned below
+                Q.at(ts[1:]).build()]
+
+        def boom(tex, states, *a, **k):
+            raise RuntimeError("poisoned finish")
+
+        monkeypatch.setattr(compiler_mod, "expr_state", boom)
+        results = g.query.run_batch(docs, on_error="envelope")
+
+        # response ordering pinned to input order
+        assert [r.kind for r in results] == ["snapshot", "expr",
+                                             "multipoint"]
+        assert [r.ok for r in results] == [True, False, True]
+        assert results[1].error.code == "execution"
+        assert "poisoned finish" in str(results[1].error)
+        # the survivors shared one merged plan with the poisoned doc...
+        assert results[0].stats["merged_docs"] == 3
+        assert results[2].stats["merged_docs"] == 3
+        assert results[0].stats["targets"] == 3       # distinct times
+        # ...with per-document stats attribution on top
+        assert results[0].stats["doc_targets"] == 1
+        assert results[2].stats["doc_targets"] == 2
+        # and the survivors' payloads are still oracle-exact
+        assert_state_equal(results[0].value, replay(uni, ev, ts[0]),
+                           check_attrs=False)
+        for t, st in results[2].value.items():
+            assert_state_equal(st, replay(uni, ev, t), check_attrs=False)
+
+        # on_error="raise" propagates the same failure
+        monkeypatch.setattr(compiler_mod, "expr_state", boom)
+        with pytest.raises(Exception, match="poisoned finish"):
+            g.query.run_batch(docs, on_error="raise")

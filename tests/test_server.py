@@ -1,0 +1,337 @@
+"""Concurrent SLO-aware query server (launch/server.py + api/scheduler.py).
+
+Covers the serving tentpole end to end over real sockets:
+
+* cross-client co-batching — co-plannable documents from different
+  connections merge into one Steiner plan (``merged_docs`` stats);
+* the correlation-id cross-wiring oracle — under concurrent sessions
+  every envelope answers exactly the request of its session, in order,
+  bit-identical (CRCs) to a direct single-client execution;
+* deadline admission — typed ``deadline`` envelopes rejected *before*
+  execution, consuming zero KV gets;
+* overload admission control — typed ``overloaded`` envelopes once the
+  queue's estimated drain time exceeds the horizon;
+* GraphPool leases — grant / release control frames / per-session byte
+  budgets with ``backpressure`` envelopes / auto-reclaim on disconnect;
+* the stdin fallback sharing the SessionCore code path with the socket
+  server (differential envelope comparison).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api.document import Q
+from repro.api.scheduler import BatchingScheduler
+from repro.core.manager import GraphManager
+from repro.data.generators import churn_network
+from repro.launch.server import QueryServer
+
+
+@pytest.fixture(scope="module")
+def history():
+    return churn_network(n_initial_edges=100, n_events=2000, seed=7)
+
+
+@pytest.fixture()
+def gm(history):
+    uni, ev = history
+    g = GraphManager(uni, ev, L=64, k=2, diff_fn="intersection")
+    yield g
+    g.close()
+
+
+class Client:
+    """One NDJSON session over a real socket."""
+
+    def __init__(self, srv: QueryServer) -> None:
+        self.sock = socket.create_connection((srv.host, srv.port))
+        self.f = self.sock.makefile("rw", encoding="utf-8", newline="\n")
+
+    def send(self, obj) -> None:
+        self.f.write((obj if isinstance(obj, str) else json.dumps(obj))
+                     + "\n")
+        self.f.flush()
+
+    def recv(self) -> dict:
+        line = self.f.readline()
+        assert line, "server closed the connection"
+        return json.loads(line)
+
+    def rpc(self, obj) -> dict:
+        self.send(obj)
+        return self.recv()
+
+    def close(self) -> None:
+        # the makefile wrapper holds its own reference to the fd — both
+        # must close for the server to see EOF
+        for h in (self.f, self.sock):
+            try:
+                h.close()
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------- co-batching
+
+
+def test_cobatch_across_clients(gm):
+    """Snapshots arriving from different connections inside one window
+    must share a merged plan — and every envelope must go back to the
+    session (and slot) that asked for it."""
+    with QueryServer(gm, window_ms=25.0, workers=2) as srv:
+        results: dict[int, list[dict]] = {}
+        barrier = threading.Barrier(4)
+
+        def run(cid: int) -> None:
+            c = Client(srv)
+            docs = [{"kind": "snapshot", "t": 100 + 50 * i,
+                     "id": f"c{cid}-{i}"} for i in range(3)]
+            barrier.wait()
+            for d in docs:
+                c.send(d)
+            results[cid] = [c.recv() for _ in docs]
+            c.close()
+
+        ths = [threading.Thread(target=run, args=(cid,)) for cid in range(4)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join(timeout=30)
+        stats = srv.scheduler.snapshot_stats()
+
+    for cid, envs in results.items():
+        assert [e["id"] for e in envs] == [f"c{cid}-{i}" for i in range(3)]
+        assert all(e["ok"] for e in envs)
+    # all 12 share one co-batching key; with a generous window at least
+    # one dispatch wave must have merged documents from >1 client
+    assert stats["co_batched_docs"] > 3
+    assert stats["max_group"] > 3
+    merged = [e["stats"].get("merged_docs", 1)
+              for envs in results.values() for e in envs]
+    assert max(merged) > 3
+
+
+def test_envelopes_bit_identical_to_direct_execution(gm):
+    """The cross-wiring oracle: concurrent served envelopes carry the
+    same CRCs as a direct single-client run of the same documents."""
+    times = [60, 120, 180, 240, 300, 360]
+    direct = {t: gm.query.run(Q.at(t).build()).to_dict()["result"]
+              for t in times}
+    with QueryServer(gm, window_ms=10.0, workers=3) as srv:
+        out: dict[int, list[dict]] = {}
+
+        def run(cid: int) -> None:
+            c = Client(srv)
+            mine = list(np.roll(times, cid))
+            for i, t in enumerate(mine):
+                c.send({"kind": "snapshot", "t": int(t),
+                        "id": f"{cid}:{i}:{t}"})
+            out[cid] = [c.recv() for _ in mine]
+            c.close()
+
+        ths = [threading.Thread(target=run, args=(cid,)) for cid in range(5)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join(timeout=30)
+
+    for cid, envs in out.items():
+        for i, env in enumerate(envs):
+            assert env["ok"], env
+            _, slot, t = env["id"].split(":")
+            assert int(slot) == i            # session order preserved
+            want = direct[int(t)]
+            got = env["result"]
+            assert (got["node_crc"], got["edge_crc"], got["nodes"],
+                    got["edges"]) == (want["node_crc"], want["edge_crc"],
+                                      want["nodes"], want["edges"])
+
+
+# -------------------------------------------------------------------- deadlines
+
+
+def test_deadline_expired_rejected_with_zero_kv_gets(gm):
+    with QueryServer(gm, window_ms=1.0, workers=1) as srv:
+        c = Client(srv)
+        g0 = gm.store.stats.gets
+        env = c.rpc({"kind": "snapshot", "t": 500,
+                     "deadline_ms": 0.0001, "id": "dl"})
+        assert env["ok"] is False
+        assert env["error"]["kind"] == "deadline"
+        assert env["id"] == "dl"
+        assert gm.store.stats.gets == g0       # rejected before execution
+        assert srv.scheduler.counters["shed_deadline"] == 1
+        # the session is still healthy
+        assert c.rpc({"kind": "snapshot", "t": 500})["ok"]
+        c.close()
+
+
+def test_deadline_cost_model_rejection_no_kv_gets(gm):
+    """A request whose *estimated* execution time (planner cost / learned
+    rate) exceeds its budget is rejected without running — the planner
+    pass is pure index work."""
+    with QueryServer(gm, window_ms=1.0, workers=1,
+                     admit_horizon_ms=0.0) as srv:
+        # cripple the learned execution rate so any plan looks too slow
+        # (admission shedding is off so only the deadline check fires)
+        srv.scheduler.cost_rate.value = 1.0   # 1 cost-unit per second
+        c = Client(srv)
+        g0 = gm.store.stats.gets
+        env = c.rpc({"kind": "snapshot", "t": 700, "deadline_ms": 50.0})
+        assert env["ok"] is False
+        assert env["error"]["kind"] == "deadline"
+        assert "plan cost" in env["error"]["message"]
+        assert gm.store.stats.gets == g0
+        c.close()
+
+
+# ------------------------------------------------------------------- admission
+
+
+def test_admission_control_sheds_overload(gm):
+    """With a 0.7ms drain horizon and prior cost estimates, the queue
+    admits ~3 one-point documents and sheds the rest with typed
+    ``overloaded`` envelopes."""
+    sched = BatchingScheduler(gm.query, window_ms=500.0, workers=1,
+                              admit_horizon_ms=0.7)
+    try:
+        futs = [sched.submit(Q.at(100 + i).build()) for i in range(10)]
+        results = [f.result(timeout=30) for f in futs]
+    finally:
+        sched.close()
+    shed = [r for r in results if not r.ok]
+    okd = [r for r in results if r.ok]
+    assert okd and shed
+    assert all(r.error.code == "overloaded" for r in shed)
+    assert sched.counters["shed_overload"] == len(shed)
+    # queue position decides: earliest submissions are the admitted ones
+    assert all(r.ok for r in results[:len(okd)])
+
+
+def test_submit_after_close_resolves_overloaded(gm):
+    sched = BatchingScheduler(gm.query, window_ms=1.0, workers=1)
+    sched.close()
+    res = sched.submit(Q.at(50).build()).result(timeout=5)
+    assert res.ok is False and res.error.code == "overloaded"
+
+
+# ---------------------------------------------------------------------- leases
+
+
+def test_lease_grant_release_and_backpressure(gm):
+    n0 = gm.pool.num_active()
+    with QueryServer(gm, window_ms=1.0, workers=1,
+                     session_lease_mb=0.0001,
+                     backpressure_grace_s=0.01) as srv:
+        c = Client(srv)
+        grant = c.rpc({"kind": "snapshot", "t": 150, "reply": "lease",
+                       "id": "L1"})
+        assert grant["ok"] and grant["id"] == "L1"
+        gids = [int(g) for g in grant["result"]["lease"]]
+        assert len(gids) == 1
+        assert gm.pool.num_active() == n0 + 1
+        # over the (tiny) session budget now: queries shed, reads go on
+        bp = c.rpc({"kind": "snapshot", "t": 150, "id": "q"})
+        assert bp["ok"] is False
+        assert bp["error"]["kind"] == "backpressure"
+        assert bp["id"] == "q"
+        # a release control frame always gets through
+        ack = c.rpc({"release": gids, "id": "R"})
+        assert ack["ok"] and ack["released"] == gids and ack["held"] == 0
+        assert ack["id"] == "R"
+        assert gm.pool.num_active() == n0
+        # and the session recovers
+        assert c.rpc({"kind": "snapshot", "t": 150})["ok"]
+        c.close()
+
+
+def test_multipoint_lease_and_release_all(gm):
+    n0 = gm.pool.num_active()
+    with QueryServer(gm, window_ms=1.0, workers=1) as srv:
+        c = Client(srv)
+        grant = c.rpc({"kind": "multipoint", "times": [100, 200, 300],
+                       "reply": "lease"})
+        assert grant["ok"]
+        lease = grant["result"]["lease"]
+        assert len(lease) == 3
+        assert sorted(int(v["t"]) for v in lease.values()) == [100, 200, 300]
+        assert gm.pool.num_active() == n0 + 3
+        ack = c.rpc({"release": "all"})
+        assert ack["held"] == 0 and len(ack["released"]) == 3
+        assert gm.pool.num_active() == n0
+        c.close()
+
+
+def test_disconnect_auto_reclaims_leases(gm):
+    import time
+
+    n0 = gm.pool.num_active()
+    with QueryServer(gm, window_ms=1.0, workers=1) as srv:
+        c = Client(srv)
+        grant = c.rpc({"kind": "snapshot", "t": 222, "reply": "lease"})
+        assert grant["ok"]
+        assert gm.pool.num_active() == n0 + 1
+        c.close()                       # no release frame
+        deadline = time.monotonic() + 10
+        while gm.pool.num_active() != n0 and time.monotonic() < deadline:
+            time.sleep(0.02)
+    assert gm.pool.num_active() == n0
+
+
+# ------------------------------------------------------------------- wire edge
+
+
+def test_malformed_lines_do_not_poison_the_session(gm):
+    with QueryServer(gm, window_ms=1.0, workers=1) as srv:
+        c = Client(srv)
+        env = c.rpc("this is not json")
+        assert env["ok"] is False and env["error"]["kind"] == "document"
+        env = c.rpc({"kind": "snapshot", "t": 50, "bogus_field": 1,
+                     "id": 42})
+        assert env["ok"] is False and env["error"]["kind"] == "document"
+        assert env["id"] == 42          # id salvaged from the raw line
+        env = c.rpc({"release": [999], "id": "r"})
+        assert env["ok"] and env["released"] == [] and env["unknown"] == [999]
+        assert c.rpc({"kind": "snapshot", "t": 50})["ok"]
+        c.close()
+
+
+def test_stdin_fallback_matches_socket_envelopes(gm):
+    """Satellite 6: the stdin wire loop and the socket server share one
+    SessionCore path — same documents, same result payloads."""
+    from repro.launch.serve import run_query_documents
+
+    docs = [{"kind": "snapshot", "t": 80, "id": "a"},
+            "garbage",
+            {"kind": "multipoint", "times": [80, 160]},
+            {"kind": "interval", "ts": 10, "te": 400}]
+    lines = [(d if isinstance(d, str) else json.dumps(d)) for d in docs]
+    stdin_envs = [json.loads(s)
+                  for s in run_query_documents(gm, lines, batch=4)]
+    with QueryServer(gm, window_ms=5.0, workers=1) as srv:
+        c = Client(srv)
+        for ln in lines:
+            c.send(ln)
+        sock_envs = [c.recv() for _ in lines]
+        c.close()
+    for a, b in zip(stdin_envs, sock_envs):
+        assert a["ok"] == b["ok"]
+        if a["ok"]:
+            assert a["result"] == b["result"]
+        else:
+            assert a["error"]["kind"] == b["error"]["kind"]
+
+
+def test_server_stats_surface(gm):
+    with QueryServer(gm, window_ms=1.0, workers=1) as srv:
+        c = Client(srv)
+        assert c.rpc({"kind": "snapshot", "t": 90})["ok"]
+        st = srv.stats()
+        assert st["sessions_live"] == 1
+        assert st["scheduler"]["executed"] >= 1
+        c.close()
