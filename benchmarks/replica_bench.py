@@ -1,0 +1,198 @@
+"""BENCH_replica: replicated shard *processes* behind the RPC transport —
+process-isolation overhead, replica-hedged tail latency under one
+degraded replica, and SIGKILL recovery.
+
+The workload is a stream of multipoint snapshot queries against a
+history whose store is wrapped with a simulated remote per-get RTT (the
+same :class:`LatencyKV` budget for every configuration).  Three
+acceptance gates (checked into the report as ``gates``):
+
+* ``proc_overhead_lt_2x`` — proc-transport single-query p50 < 2x the
+  in-thread transport at equal KV budget (the shard-local hot caches
+  plus batched one-round-trip fetches must pay for the RPC hop);
+* ``replica_hedged_tail`` — with one replica degraded (``set_delay``
+  fault injection inside the shardd process), hedged p99 < 0.6x
+  unhedged p99: the hedge routes to a *distinct* replica, so it never
+  queues behind the degraded one;
+* ``kill_recovery`` — SIGKILL one replica mid-stream: every query still
+  completes (zero failures) and every result is bit-identical to the
+  replay oracle.
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.replica_bench --quick
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import GraphManager, replay
+from repro.data.generators import churn_network
+from repro.runtime.shard import ShardedRetriever
+
+from .shard_bench import LatencyKV, GET_LATENCY_US
+from repro.storage.kv import MemKV
+
+OUT_JSON = "BENCH_replica.json"
+PARTITIONS = 16
+POINTS = 4
+WORKERS = 2
+REPLICAS = 2
+DEGRADE_MS = 40.0         # per-fetch stall injected into the slow replica
+
+
+def _queries(tmax: int, n: int, seed: int = 0) -> list[list[int]]:
+    rng = np.random.default_rng(seed)
+    return [sorted({int(t) for t in rng.integers(0, tmax + 1, POINTS)})
+            for _ in range(n)]
+
+
+def _stream(sr, queries, on_query=None) -> dict:
+    lats, out, failures = [], [], 0
+    t0 = time.perf_counter()
+    for i, q in enumerate(queries):
+        if on_query is not None:
+            on_query(i, sr)
+        tq = time.perf_counter()
+        try:
+            out.append(sr.retrieve(q))
+        except Exception:
+            failures += 1
+            out.append(None)
+        lats.append(time.perf_counter() - tq)
+    wall = time.perf_counter() - t0
+    lats_us = np.sort(np.asarray(lats)) * 1e6
+    return {"qps": len(queries) / wall, "wall_s": wall,
+            "p50_us": float(np.percentile(lats_us, 50)),
+            "p99_us": float(np.percentile(lats_us, 99)),
+            "hedges": sr.hedges_total, "requeues": sr.requeues_total,
+            "failovers": sr.failovers_total, "failures": failures,
+            "results": out}
+
+
+def _row(res: dict) -> dict:
+    return {k: round(v, 2) if isinstance(v, float) else v
+            for k, v in res.items() if k != "results"}
+
+
+def _identical(uni, ev, queries, results) -> bool:
+    for q, got in zip(queries, results):
+        if got is None:
+            return False
+        for t in q:
+            truth = replay(uni, ev, t)
+            if not (np.array_equal(got[t].node_mask, truth.node_mask)
+                    and np.array_equal(got[t].edge_mask, truth.edge_mask)):
+                return False
+    return True
+
+
+def bench_replica(quick: bool = False):
+    n = 2_000 if quick else 6_000
+    n_queries = 16 if quick else 40
+    uni, ev = churn_network(n_initial_edges=n // 12, n_events=n, seed=9)
+    tmax = int(ev.time[-1])
+    queries = _queries(tmax, n_queries, seed=5)
+
+    store = LatencyKV(MemKV(), GET_LATENCY_US * 1e-6)
+    gm = GraphManager(uni, ev, store=store, L=max(n // 40, 64), k=2,
+                      cache_bytes=0, prefetch_workers=0,
+                      num_partitions=PARTITIONS, partition_fn="mod_hash",
+                      diff_fn="intersection")
+
+    rows = []
+    report: dict = {"n_events": n, "partitions": PARTITIONS,
+                    "n_queries": n_queries, "points_per_query": POINTS,
+                    "workers": WORKERS, "replicas": REPLICAS,
+                    "kv_get_latency_us": GET_LATENCY_US}
+
+    # ---- overhead: proc transport vs in-thread at equal KV budget -------
+    with ShardedRetriever(gm, WORKERS, max_hedges=0) as sr:
+        thread_res = _stream(sr, queries)
+    report["thread"] = _row(thread_res)
+    rows.append(("replica/thread", thread_res["p50_us"], report["thread"]))
+
+    with ShardedRetriever(gm, WORKERS, transport="proc", replicas=REPLICAS,
+                          max_hedges=0) as sr:
+        proc_res = _stream(sr, queries)
+    report["proc"] = _row(proc_res)
+    rows.append(("replica/proc", proc_res["p50_us"], report["proc"]))
+    overhead = proc_res["p50_us"] / max(thread_res["p50_us"], 1e-9)
+    report["proc_p50_over_thread_p50"] = round(overhead, 3)
+
+    identical = (_identical(uni, ev, queries, thread_res["results"])
+                 and _identical(uni, ev, queries, proc_res["results"]))
+
+    # ---- tail: one degraded replica, hedged vs unhedged -----------------
+    # Degrade the busiest server with an in-process per-fetch stall; a
+    # hedged duplicate must route to a *different* replica of the same
+    # partitions (ReplicaManager.route), so it never waits behind it.
+    tail = {}
+    for mode, hedges in (("unhedged", 0), ("hedged", 1)):
+        with ShardedRetriever(gm, WORKERS, transport="proc",
+                              replicas=REPLICAS, max_hedges=hedges,
+                              hedge_frac=1.0, hedge_delay_s=3e-3) as sr:
+            asg = sr.assignment(PARTITIONS)
+            slow = max(asg, key=lambda w: len(asg[w]))
+            sr.transport.inject_delay(slow, ms=DEGRADE_MS, count=-1)
+            res = _stream(sr, queries)
+            sr.transport.inject_delay(slow, ms=0.0, count=0)
+        tail[mode] = res
+        report[f"degraded_{mode}"] = _row(res)
+        rows.append((f"replica/degraded_{mode}", res["p99_us"],
+                     report[f"degraded_{mode}"]))
+    p99_ratio = tail["hedged"]["p99_us"] / max(tail["unhedged"]["p99_us"],
+                                               1e-9)
+    report["hedged_p99_over_unhedged_p99"] = round(p99_ratio, 3)
+
+    # ---- chaos: SIGKILL one replica mid-stream --------------------------
+    kill_at = max(2, n_queries // 3)
+    killed = []
+
+    def killer(i: int, sr) -> None:
+        if i == kill_at and not killed:
+            victim = next(iter(sr.assignment(PARTITIONS)))
+            killed.append(sr.transport.kill(victim))
+
+    with ShardedRetriever(gm, WORKERS, transport="proc", replicas=REPLICAS,
+                          task_retries=2, io_retries=2,
+                          hedge_delay_s=5e-3) as sr:
+        kill_res = _stream(sr, queries, on_query=killer)
+    kill_ok = (kill_res["failures"] == 0 and bool(killed)
+               and _identical(uni, ev, queries, kill_res["results"]))
+    report["kill_recovery"] = {**_row(kill_res),
+                               "killed_pid": killed[0] if killed else None,
+                               "kill_at_query": kill_at}
+    rows.append(("replica/kill_recovery", kill_res["p99_us"],
+                 report["kill_recovery"]))
+
+    report["gates"] = {
+        "proc_overhead_lt_2x": bool(overhead < 2.0),
+        "bit_identical": bool(identical),
+        "replica_hedged_tail": bool(p99_ratio < 0.6),
+        "kill_recovery": bool(kill_ok),
+    }
+    gm.close()
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("replica/report", 0.0,
+                 {"json": OUT_JSON, **report["gates"]}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_replica(quick=args.quick):
+        print(f"{name},{us:.1f},\"{json.dumps(derived)}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

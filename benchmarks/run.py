@@ -18,8 +18,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (ingest_bench, materialize_bench, paper_figs, query_bench,
-                   retrieval_bench, roofline_report, server_bench,
-                   shard_bench, storage_bench, temporal_bench)
+                   replica_bench, retrieval_bench, roofline_report,
+                   server_bench, shard_bench, storage_bench, temporal_bench)
 
     benches = [
         materialize_bench.bench_materialize,
@@ -30,6 +30,7 @@ def main() -> None:
         query_bench.bench_query,
         ingest_bench.bench_ingest,
         shard_bench.bench_shard,
+        replica_bench.bench_replica,
         server_bench.bench_server,
         paper_figs.fig6_vs_copylog,
         paper_figs.fig7_vs_interval_tree,

@@ -114,6 +114,7 @@ class EpochRegistry:
         self._current = Epoch(0, data)
         self._retired: deque[Epoch] = deque()
         self._reclaimed = 0
+        self._subscribers: list[Callable[[int, EpochData], None]] = []
 
     # ------------------------------------------------------------ reads
     @property
@@ -153,9 +154,33 @@ class EpochRegistry:
             old.reclaims.extend(reclaims)
             self._retired.append(old)
             self._current = Epoch(old.id + 1, data)
+            new_id = self._current.id
             ready = self._drain_locked()
+            subs = list(self._subscribers)
         self._run(ready)
-        return self._current.id
+        # announcements run outside the lock (a subscriber may do I/O —
+        # e.g. the process transport fanning the new id out to shard
+        # caches); a reader racing ahead of a slow announcement is still
+        # safe because fetches carry the pinned epoch id (``min_epoch``)
+        for cb in subs:
+            cb(new_id, data)
+        return new_id
+
+    # ---------------------------------------------------- subscriptions
+    def subscribe(self, cb: Callable[[int, EpochData], None]) -> None:
+        """Register ``cb(new_epoch_id, data)`` to run after every publish
+        — the cache-invalidation fan-out hook (shard-local hot caches
+        subscribe via their transport).  Callbacks run outside the
+        registry lock, in publish order for any single publisher."""
+        with self._lock:
+            self._subscribers.append(cb)
+
+    def unsubscribe(self, cb: Callable[[int, EpochData], None]) -> None:
+        with self._lock:
+            try:
+                self._subscribers.remove(cb)
+            except ValueError:
+                pass
 
     # ------------------------------------------------------------ drain
     def _drain_locked(self) -> list[Callable[[], None]]:

@@ -390,21 +390,41 @@ class GraphManager:
 
     # ------------------------------------------------------------- sharding
     def enable_sharding(self, workers: int | Sequence[str] | None = None,
+                        *, transport: "Any" = None,
+                        replicas: int | None = None,
                         **kwargs) -> "Any":
         """Turn on sharded multi-worker retrieval
         (:class:`~repro.runtime.shard.ShardedRetriever`): every cache-miss
         retrieval through the query service scatters its plan across a
-        pool of shard executors (one per worker, partitions assigned by
-        consistent hashing) and gathers the per-shard slot results.
-        ``workers`` defaults to one worker per storage partition.  Results
-        stay bit-identical to unsharded execution.  Re-enabling replaces
-        the previous retriever; extra kwargs go to the retriever
-        (hedging/retry policy)."""
+        fleet of shard servers (partitions assigned by rendezvous hashing)
+        and gathers the per-shard slot results.  ``workers`` defaults to
+        one worker per storage partition.  Results stay bit-identical to
+        unsharded execution.
+
+        ``transport`` selects how shard fetches move bytes: ``"thread"``
+        (default — the legacy in-process pool), ``"proc"`` (one
+        ``launch/shardd`` OS process per worker with epoch-invalidated
+        shard-local caches), or a ready :class:`~repro.runtime.shard
+        .ShardTransport` instance (tests inject instrumented ones).
+        ``replicas`` is the candidate-server count per partition —
+        hedges/failover then route to distinct replicas.  Both default
+        from the environment (``REPRO_SHARD_TRANSPORT``,
+        ``REPRO_REPLICAS``) so the differential CI suite can re-run the
+        whole tier-1 battery over the process transport unchanged.
+        Re-enabling replaces the previous retriever; extra kwargs go to
+        the retriever (hedging/retry policy)."""
+        import os
+
         from ..runtime.shard import ShardedRetriever
         self.disable_sharding()
         if workers is None:
             workers = max(1, self.dg.P)
-        self.sharded = ShardedRetriever(self, workers, **kwargs)
+        if transport is None:
+            transport = os.environ.get("REPRO_SHARD_TRANSPORT") or None
+        if replicas is None:
+            replicas = int(os.environ.get("REPRO_REPLICAS", "1"))
+        self.sharded = ShardedRetriever(self, workers, transport=transport,
+                                        replicas=replicas, **kwargs)
         return self.sharded
 
     def disable_sharding(self) -> None:

@@ -175,10 +175,14 @@ def run_query_documents(gm, lines: Iterable[str], batch: int = 8,
 
 def _build_query_gm(n_events: int, seed: int, codec: str, kv: str,
                     kv_dir: str | None, hot_mb: float, budget_mb: float,
-                    shards: int):
+                    shards: int, shard_procs: int = 0, replicas: int = 1):
     """Shared GraphManager construction for the query / server front
     ends: synthetic churn history, optional disk-backed store tier,
-    advisor budget and shard workers."""
+    advisor budget and shard workers.  ``shard_procs > 0`` serves
+    retrievals through that many ``launch/shardd`` OS processes (the
+    replicated RPC transport) instead of the in-thread pool; partitions
+    then default to ``4 × shard_procs`` for balance unless ``--shards``
+    pins a count."""
     import os as _os
 
     from ..core import GraphManager
@@ -193,15 +197,19 @@ def _build_query_gm(n_events: int, seed: int, codec: str, kv: str,
     if kv != "mem":
         d = _os.path.join(kv_dir, "query") if kv_dir else None
         store = make_store(kv, directory=d, hot_bytes=int(hot_mb * 2**20))
+    P = shards if shards > 1 else (4 * shard_procs if shard_procs > 0 else 1)
     part_kw = {}
-    if shards > 1:
-        part_kw = dict(num_partitions=shards, partition_fn="mod_hash")
+    if P > 1:
+        part_kw = dict(num_partitions=P, partition_fn="mod_hash")
     gm = GraphManager(uni, ev, store=store,
                       L=max(n_events // 40, 64), k=2,
                       diff_fn="intersection", **part_kw)
     if budget_mb > 0:
         gm.enable_advisor(budget_bytes=int(budget_mb * 2**20))
-    if shards > 1:
+    if shard_procs > 0:
+        gm.enable_sharding(shard_procs, transport="proc",
+                           replicas=replicas, hot_mb=hot_mb)
+    elif shards > 1:
         gm.enable_sharding(shards)
     return gm, store, ev
 
@@ -209,19 +217,26 @@ def _build_query_gm(n_events: int, seed: int, codec: str, kv: str,
 def serve_query(n_events: int, batch: int, input_path: str | None,
                 seed: int = 0, codec: str = "v2", kv: str = "mem",
                 kv_dir: str | None = None, hot_mb: float = 8.0,
-                budget_mb: float = 0.0, shards: int = 1) -> None:
+                budget_mb: float = 0.0, shards: int = 1,
+                shard_procs: int = 0, replicas: int = 1) -> None:
     """Real request serving over stdin (the documented ``--port 0``
     fallback): NDJSON GraphQuery documents in, JSON QueryResult envelopes
     out (stdout stays pure NDJSON; the summary goes to stderr).
     ``--advisor-mb > 0`` also enables the materialization advisor under
     that GraphPool budget.  ``--shards N > 1`` stores the history in N
     mod_hash partitions and serves retrievals through N shard workers
-    (scatter/gather with hedged fetches)."""
+    (scatter/gather with hedged fetches).  ``--shard-procs N`` upgrades
+    the workers to N real shardd OS processes behind the RPC transport,
+    each partition served by ``--replicas R`` rendezvous-ranked
+    replicas."""
     gm, store, ev = _build_query_gm(n_events, seed, codec, kv, kv_dir,
-                                    hot_mb, budget_mb, shards)
+                                    hot_mb, budget_mb, shards,
+                                    shard_procs, replicas)
     print(f"ready: {n_events} events, tmax={int(ev.time[-1])}, "
           f"doc-batch={batch}"
-          + (f", shards={shards}" if shards > 1 else ""),
+          + (f", shards={shards}" if shards > 1 else "")
+          + (f", shard-procs={shard_procs} replicas={replicas}"
+             if shard_procs > 0 else ""),
           file=sys.stderr, flush=True)
 
     lines = (open(input_path) if input_path and input_path != "-"
@@ -240,9 +255,11 @@ def serve_query(n_events: int, batch: int, input_path: str | None,
         st = gm.store.stats
         shard_note = ""
         if gm.sharded is not None:
-            shard_note = (f"  shards: {shards} workers, "
+            shard_note = (f"  shards: {len(gm.sharded.workers)} "
+                          f"{gm.sharded.transport.name} workers, "
                           f"{gm.sharded.hedges_total} hedges, "
-                          f"{gm.sharded.requeues_total} requeues")
+                          f"{gm.sharded.requeues_total} requeues, "
+                          f"{gm.sharded.failovers_total} failovers")
         print(f"served {served} documents ({ok} ok) in {wall:.2f}s "
               f"({served / max(wall, 1e-9):.0f} docs/s)  "
               f"kv: {st.gets} gets, {st.bytes_read / 2**20:.2f} MiB"
@@ -259,7 +276,8 @@ def serve_server(n_events: int, port: int, seed: int = 0,
                  budget_mb: float = 0.0, shards: int = 1,
                  window_ms: float = 2.0, workers: int = 4,
                  admit_ms: float = 250.0, session_mb: float | None = None,
-                 serve_s: float = 0.0) -> None:
+                 serve_s: float = 0.0, shard_procs: int = 0,
+                 replicas: int = 1) -> None:
     """The concurrent socket front end (``--mode server``): one
     :class:`~repro.launch.server.QueryServer` accepting NDJSON sessions,
     co-batching co-plannable documents across clients inside a
@@ -273,7 +291,8 @@ def serve_server(n_events: int, port: int, seed: int = 0,
     from .server import QueryServer
 
     gm, store, ev = _build_query_gm(n_events, seed, codec, kv, kv_dir,
-                                    hot_mb, budget_mb, shards)
+                                    hot_mb, budget_mb, shards,
+                                    shard_procs, replicas)
     srv = QueryServer(gm, port=port, window_ms=window_ms, workers=workers,
                       admit_horizon_ms=admit_ms,
                       session_lease_mb=session_mb)
@@ -562,6 +581,15 @@ def main() -> None:
                     help="query mode: partition the history into this many "
                          "mod_hash shards and serve retrievals through a "
                          "shard-worker pool (1 = unsharded)")
+    ap.add_argument("--shard-procs", type=int, default=0,
+                    help="query/server mode: serve retrievals through this "
+                         "many shardd OS processes behind the RPC "
+                         "transport (0 = in-thread workers; implies "
+                         "4*N partitions unless --shards is set)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="query/server mode: replicas per partition for "
+                         "the proc transport — hedges and failover route "
+                         "to a distinct replica")
     ap.add_argument("--port", type=int, default=0,
                     help="server mode: TCP port to bind (0 in query mode "
                          "= the documented stdin fallback; 0 in server "
@@ -603,12 +631,14 @@ def main() -> None:
                      budget_mb=args.advisor_mb, shards=args.shards,
                      window_ms=args.window_ms, workers=args.server_workers,
                      admit_ms=args.admit_ms, session_mb=args.session_mb,
-                     serve_s=args.serve_s)
+                     serve_s=args.serve_s, shard_procs=args.shard_procs,
+                     replicas=args.replicas)
     elif args.mode == "query":
         serve_query(args.events, args.doc_batch, args.input,
                     codec=args.codec, kv=args.kv, kv_dir=args.kv_dir,
                     hot_mb=args.hot_mb, budget_mb=args.advisor_mb,
-                    shards=args.shards)
+                    shards=args.shards, shard_procs=args.shard_procs,
+                    replicas=args.replicas)
     elif args.mode == "snapshots":
         serve_snapshots(args.events, args.budget_mb, args.queries, args.zipf,
                         batch=args.multipoint_batch, codec=args.codec,

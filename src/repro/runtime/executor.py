@@ -131,10 +131,15 @@ class HostExecutor:
     additionally fetches each payload once per plan and can overlap fetches
     with application through a :class:`Prefetcher`."""
 
-    def __init__(self, dg: "DeltaGraph", prefetcher: Prefetcher | None = None
-                 ) -> None:
+    def __init__(self, dg: "DeltaGraph", prefetcher: Prefetcher | None = None,
+                 mget=None) -> None:
         self.dg = dg
         self.prefetcher = prefetcher
+        # pluggable payload fetch (``keys -> list[bytes|None]``): the
+        # sharded transports route each Fetch to the replica serving its
+        # partitions; None keeps the direct store path (``dg._mget``)
+        self.mget = mget if mget is not None else dg._mget
+        self._routed = mget is not None
 
     # -- payload fetch plumbing --------------------------------------------
     def _fetch_keys(self, op: Fetch, options: AttrOptions):
@@ -193,10 +198,18 @@ class HostExecutor:
                     op = byid[nid].op
                     # decode runs inside the prefetch worker: the future
                     # resolves to arrays, not raw blobs
-                    futures[nid] = self.prefetcher.submit(
-                        keys,
-                        decode=lambda blobs, op=op, keys=keys, meta=meta:
-                            self._decode(op, keys, meta, blobs))
+                    if self._routed:
+                        # routed fetch: the worker thread calls the
+                        # transport's mget, not the store directly
+                        futures[nid] = self.prefetcher.submit_fn(
+                            lambda op=op, keys=keys, meta=meta:
+                                self._decode(op, keys, meta,
+                                             self.mget(keys)))
+                    else:
+                        futures[nid] = self.prefetcher.submit(
+                            keys,
+                            decode=lambda blobs, op=op, keys=keys, meta=meta:
+                                self._decode(op, keys, meta, blobs))
 
         if window:
             top_up()
@@ -211,7 +224,7 @@ class HostExecutor:
                     payloads[nid] = fut.result()   # decoded off-thread
                 else:
                     payloads[nid] = self._decode(byid[nid].op, keys, meta,
-                                                 dg._mget(keys))
+                                                 self.mget(keys))
                 if window:
                     top_up()
             out = payloads[nid]

@@ -22,24 +22,45 @@ import time
 from typing import Any, Callable, Iterable
 
 
+def default_retryable(e: BaseException) -> bool:
+    """The standard transient-fault classification: local IO/timeout
+    faults, plus any error that classifies *itself* via a ``retryable``
+    attribute — the RPC layer's typed transport errors
+    (:mod:`repro.runtime.rpc`) mark connection resets and deadline expiry
+    retryable but framing corruption and remote logic errors fatal."""
+    return (isinstance(e, (IOError, TimeoutError))
+            or getattr(e, "retryable", False) is True)
+
+
 def retry(fn: Callable, *, attempts: int = 4, base_delay: float = 0.01,
           retryable=(IOError, TimeoutError),
           sleep: Callable = time.sleep):
-    """Bounded exponential backoff.  ``KeyError`` is deliberately *not*
+    """Bounded exponential backoff.  ``retryable`` is either an exception
+    class tuple or a predicate ``(exc) -> bool`` (pass
+    :func:`default_retryable` to honor the RPC layer's own
+    retryable/fatal classification).  ``KeyError`` is deliberately *not*
     retryable by default: a missing blob is a routing/consistency bug, not
     a transient fault, and backing off on it turns every such bug into a
     multi-attempt stall."""
     if attempts < 1:
         raise ValueError(f"attempts must be >= 1, got {attempts}")
+    if callable(retryable) and not isinstance(retryable, type):
+        pred = retryable
+    else:
+        pred = lambda e: isinstance(e, retryable)  # noqa: E731
     for i in range(attempts):
         try:
             return fn()
-        except retryable as e:  # noqa: PERF203
+        except Exception as e:  # noqa: PERF203
+            if not pred(e):
+                raise
             last = e
             if i + 1 < attempts:
                 sleep(base_delay * (2 ** i))
     # re-raise the final attempt's exception with its original traceback
-    # (the exception object carries __traceback__; `raise` appends here)
+    # (the exception object carries __traceback__; `raise` appends here).
+    # For RPC RemoteCallError the *remote* traceback string rides along in
+    # the message, so the worker-side frames survive this local re-raise.
     raise last
 
 
@@ -70,6 +91,22 @@ class HeartbeatTracker:
                 if now - t <= self.timeout]
 
 
+def _hrw(s: str) -> int:
+    import hashlib
+    return int(hashlib.md5(s.encode()).hexdigest()[:8], 16)
+
+
+def rendezvous_rank(partition: int, workers: list[str]) -> list[str]:
+    """Workers ordered by descending rendezvous weight for ``partition``.
+    ``rank[0]`` is :func:`elastic_replan`'s assignment; ``rank[1:]`` are
+    the natural replica/failover candidates — removing any worker deletes
+    its entry without reordering the rest, so replica sets move minimally
+    on membership change (same hash, same guarantee)."""
+    scored = sorted(((-_hrw(f"part{partition}@{w}"), i, w)
+                     for i, w in enumerate(workers)))
+    return [w for _, _, w in scored]
+
+
 def elastic_replan(partitions: int, workers: list[str]) -> dict[int, str]:
     """Rendezvous (highest-random-weight) partition→worker assignment:
     partition ``p`` goes to the worker maximizing ``h(p, w)``.  When a
@@ -77,13 +114,7 @@ def elastic_replan(partitions: int, workers: list[str]) -> dict[int, str]:
     any other partition's argmax — and each partition picks independently
     and uniformly, so the load is multinomial-balanced (the ring variant's
     arc-length skew made small fleets badly lopsided)."""
-    import hashlib
-
-    def h(s: str) -> int:
-        return int(hashlib.md5(s.encode()).hexdigest()[:8], 16)
-
-    return {p: max(workers, key=lambda w: h(f"part{p}@{w}"))
-            for p in range(partitions)}
+    return {p: rendezvous_rank(p, workers)[0] for p in range(partitions)}
 
 
 @dataclasses.dataclass

@@ -55,14 +55,11 @@ def _key_str(key: Key) -> str:
 def mget_optional(store: "KVStore", keys: list) -> list:
     """Batched get where a missing key yields ``None`` (a component created
     before its column existed).  One protocol shared by the synchronous
-    executor path and the async prefetcher — they must decode identically."""
-    out = []
-    for k in keys:
-        try:
-            out.append(store.get(k))
-        except KeyError:
-            out.append(None)
-    return out
+    executor path and the async prefetcher — they must decode identically.
+    Delegates to :meth:`KVStore.mget` so batching-aware backends (a remote
+    shard server, the tiered cache) answer the whole list in one round
+    trip instead of a get per key."""
+    return store.mget(keys)
 
 
 class KVStats:
@@ -170,6 +167,19 @@ class KVStore:
     def multi_get(self, keys: list[Key]) -> list[bytes]:
         """Batched fetch — single round-trip in a real remote store."""
         return [self.get(k) for k in keys]
+
+    def mget(self, keys: list[Key]) -> list:
+        """Batched fetch with ``None`` for missing keys (the
+        :func:`mget_optional` protocol).  Backends that can answer a whole
+        batch in one round trip (remote stores, the tiered cache) override
+        this; the default is a per-key loop."""
+        out = []
+        for k in keys:
+            try:
+                out.append(self.get(k))
+            except KeyError:
+                out.append(None)
+        return out
 
     def total_bytes(self) -> int:
         return sum(len(self.get(k)) for k in self.keys())
@@ -618,6 +628,79 @@ class TieredKV(KVStore):
         self.stats.add_get(len(v), hot=False)
         return v
 
+    def mget(self, keys: list[Key]) -> list:
+        """Batched :func:`mget_optional` semantics: hot hits answered from
+        the cache, all misses fetched from the cold tier in **one**
+        ``cold.mget`` round trip (the batching that makes a remote cold
+        tier — e.g. a shard server's origin — affordable), each admitted
+        under the same per-key version guard as :meth:`get`."""
+        out: list = [None] * len(keys)
+        hit = [False] * len(keys)
+        with self._lock:
+            for i, k in enumerate(keys):
+                v = self._hot.get(k)
+                if v is not None:
+                    self._hot.move_to_end(k)
+                    out[i] = v
+                    hit[i] = True
+        miss_idx = []
+        for i in range(len(keys)):
+            if hit[i]:
+                self.stats.add_get(len(out[i]), hot=True)
+            else:
+                miss_idx.append(i)
+        if not miss_idx:
+            return out
+        miss_keys = [keys[i] for i in miss_idx]
+        with self._lock:
+            vers = [self._ver.get(k, 0) for k in miss_keys]
+            for k in miss_keys:
+                self._inflight[k] = self._inflight.get(k, 0) + 1
+        try:
+            blobs = self.cold.mget(miss_keys)
+        except BaseException:
+            with self._lock:
+                for k in miss_keys:
+                    self._dec_inflight(k)
+            raise
+        racy: list[Key] = []
+        with self._lock:
+            for j, (i, k, ver) in enumerate(zip(miss_idx, miss_keys, vers)):
+                self._dec_inflight(k)
+                v = blobs[j]
+                if v is None:
+                    continue                  # absent in cold: stays None
+                if self._ver.get(k, 0) == ver:
+                    self._admit(k, v)
+                    out[i] = v
+                elif self._hot.get(k) is not None:
+                    self._hot.move_to_end(k)
+                    out[i] = self._hot[k]
+                else:
+                    racy.append((i, k))       # overwritten mid-read — retry
+        for i, k in racy:
+            try:
+                out[i] = self.get(k)
+            except KeyError:
+                out[i] = None
+        for j, i in enumerate(miss_idx):
+            if out[i] is not None and (i, keys[i]) not in racy:
+                if blobs[j] is not None:
+                    self.stats.add_get(len(out[i]), hot=False)
+        return out
+
+    def invalidate_hot(self) -> int:
+        """Drop every hot entry (epoch-publish invalidation in a shard
+        process: the coordinator announced a new index version, so any
+        cached blob may have been superseded at the origin).  Returns the
+        number of entries dropped; subsequent gets read through to the
+        cold tier."""
+        with self._lock:
+            n = len(self._hot)
+            self._hot.clear()
+            self._hot_size = 0
+        return n
+
     def put(self, key: Key, value: bytes) -> None:
         value = bytes(value)
         with self._write_lock:
@@ -729,6 +812,20 @@ class PartitionedKV(KVStore):
 
     def get(self, key: Key) -> bytes:
         return self._route(key).get(key)
+
+    def mget(self, keys: list[Key]) -> list:
+        """Route then batch: keys are grouped per backend so each storage
+        unit answers one batched fetch (order preserved)."""
+        groups: dict[int, list[int]] = {}
+        for i, k in enumerate(keys):
+            backend = self._route(k)
+            groups.setdefault(id(backend), []).append(i)
+        out: list = [None] * len(keys)
+        for idxs in groups.values():
+            backend = self._route(keys[idxs[0]])
+            for i, v in zip(idxs, backend.mget([keys[i] for i in idxs])):
+                out[i] = v
+        return out
 
     def put(self, key: Key, value: bytes) -> None:
         self._route(key).put(key, value)

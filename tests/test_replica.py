@@ -1,0 +1,366 @@
+"""Replicated shard processes: placement, distinct-replica hedging, the
+process transport's bit-identity, chaos (SIGKILL) failover, and
+epoch-driven cache invalidation.
+
+The replication contract under test (ISSUE: replicated shard processes):
+
+* rendezvous ranking gives every partition ``R`` candidate servers with
+  rank 0 identical to the legacy ``elastic_replan`` primary, and removing
+  a server moves exactly its partitions (minimal reassignment);
+* a hedged or requeued attempt routes to a candidate **distinct from the
+  servers already tried** whenever one exists;
+* retrieval through shardd OS processes is bit-identical to the replay
+  oracle — including while a replica is being SIGKILL'd mid-query and
+  across live-ingest epoch publishes that invalidate shard-local caches.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import GraphManager, replay
+from repro.core.query import parse_attr_options
+from repro.data.generators import random_history
+from repro.runtime.fault import elastic_replan, rendezvous_rank
+from repro.runtime.replica import ReplicaManager
+from repro.runtime.rpc import RemoteCallError
+from repro.runtime.shard import (InThreadTransport, ProcTransport,
+                                 ShardedRetriever, ShardExecutionError)
+
+ATTRS = "+node:all+edge:all"
+
+
+def _gm(seed: int, P: int, fn: str = "mod_hash", n: int | None = None,
+        **kw) -> tuple:
+    uni, ev = random_history(n if n is not None else
+                             int(np.random.default_rng(seed)
+                                 .integers(60, 140)), seed)
+    gm = GraphManager(uni, ev, L=16, k=2, cache_bytes=0,
+                      prefetch_workers=0, num_partitions=P,
+                      partition_fn=fn, **kw)
+    return uni, ev, gm
+
+
+def _times(ev, seed: int, n: int = 5) -> list[int]:
+    tmax = int(ev.time[-1]) if len(ev) else 0
+    rng = np.random.default_rng(seed + 1)
+    return sorted({int(t) for t in rng.integers(0, tmax + 2, n)} | {tmax})
+
+
+def _check(uni, ev, gm, out, times, attrs=True) -> None:
+    opts = parse_attr_options(ATTRS, uni) if attrs else None
+    oracle = (gm.dg.get_snapshots(times, opts, pool=gm.pool)
+              if attrs else None)
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(out[t].node_mask, truth.node_mask), t
+        assert np.array_equal(out[t].edge_mask, truth.edge_mask), t
+        if attrs:
+            assert oracle[t].equal(out[t]), t
+
+
+# ---------------------------------------------------------------------------
+# placement: rendezvous ranking and the ReplicaManager
+# ---------------------------------------------------------------------------
+
+def test_rendezvous_rank_is_permutation_with_legacy_primary():
+    servers = [f"s{i}" for i in range(5)]
+    legacy = elastic_replan(32, servers)
+    for p in range(32):
+        rank = rendezvous_rank(p, servers)
+        assert sorted(rank) == sorted(servers)       # a full permutation
+        assert rank[0] == legacy[p]                  # rank 0 == old primary
+
+
+def test_removing_a_server_reorders_nothing_else():
+    """Rendezvous is per-server independent: dropping ``dead`` deletes its
+    entry from every ranking without permuting the survivors — the
+    minimal-reassignment property."""
+    servers = [f"s{i}" for i in range(6)]
+    for dead in servers:
+        rest = [s for s in servers if s != dead]
+        for p in range(24):
+            full = rendezvous_rank(p, servers)
+            assert rendezvous_rank(p, rest) == \
+                [s for s in full if s != dead], (p, dead)
+
+
+def test_replica_manager_candidates_and_minimal_failover():
+    servers = [f"s{i}" for i in range(5)]
+    rm = ReplicaManager(servers, replicas=3)
+    P = 40
+    for p in range(P):
+        cands = rm.replicas_of(p, servers)
+        assert len(cands) == 3 and len(set(cands)) == 3
+        assert cands[0] == rm.primary(p, servers)
+    before = rm.assignment(P, servers)
+    assert sorted(p for ps in before.values() for p in ps) == list(range(P))
+    # kill one server: exactly its partitions move, each to its rank-1
+    dead = servers[2]
+    alive = [s for s in servers if s != dead]
+    after = rm.assignment(P, alive)
+    owner_b = {p: w for w, ps in before.items() for p in ps}
+    owner_a = {p: w for w, ps in after.items() for p in ps}
+    for p in range(P):
+        if owner_b[p] != dead:
+            assert owner_a[p] == owner_b[p], p       # nobody else moved
+        else:
+            assert owner_a[p] == rm.replicas_of(p, servers)[1], p
+
+
+def test_route_picks_first_untried_replica():
+    servers = [f"s{i}" for i in range(4)]
+    rm = ReplicaManager(servers, replicas=3)
+    for p in range(16):
+        cands = rm.replicas_of(p, servers)
+        assert rm.route(p, servers) == cands[0]
+        assert rm.route(p, servers, {cands[0]}) == cands[1]
+        assert rm.route(p, servers, {cands[0], cands[1]}) == cands[2]
+        # every replica tried: fall back to the primary, not a crash
+        assert rm.route(p, servers, set(cands)) == cands[0]
+
+
+# ---------------------------------------------------------------------------
+# satellite (a): a hedged attempt must target a distinct candidate server
+# ---------------------------------------------------------------------------
+
+class RecordingTransport(InThreadTransport):
+    """In-thread transport instrumented with a per-fetch ``(server, keys)``
+    log and a one-shot stall on a chosen server — enough to observe *which
+    replica* every attempt routed to without any processes."""
+
+    def __init__(self, gm, servers, stall: str | None = None,
+                 stall_s: float = 0.25) -> None:
+        super().__init__(gm, servers)
+        self.log: list[tuple[str, tuple]] = []
+        self.stall = stall
+        self.stall_s = stall_s
+
+    def fetch(self, server, keys, *, min_epoch=0, deadline_s=None):
+        with self._lock:
+            self.log.append((server, tuple(keys)))
+        if server == self.stall:
+            time.sleep(self.stall_s)
+        return super().fetch(server, keys, min_epoch=min_epoch,
+                             deadline_s=deadline_s)
+
+
+def test_hedge_routes_to_distinct_replica():
+    uni, ev, gm = _gm(41, 6)
+    times = _times(ev, 41)
+    tr = RecordingTransport(gm, ["s0", "s1"], stall="s0", stall_s=0.3)
+    with ShardedRetriever(gm, 2, transport=tr, replicas=2,
+                          hedge_frac=1.0, max_hedges=1,
+                          hedge_delay_s=0.01) as sr:
+        assert set(sr.assignment(gm.dg.P)) == {"s0", "s1"}
+        out = sr.retrieve(times, parse_attr_options(ATTRS, uni))
+        assert sr.hedges_total >= 1
+        # the hedge of the stalled task re-fetched the *same key batches*
+        # from the other server — never a duplicate race on s0
+        by_keys: dict[tuple, set] = {}
+        for server, keys in tr.log:
+            by_keys.setdefault(keys, set()).add(server)
+        rehedged = [srvs for srvs in by_keys.values() if len(srvs) > 1]
+        assert rehedged, "hedge never issued (or raced the same server)"
+        assert all(len(s) == 2 for s in rehedged)
+        assert sr.failovers_total >= 1        # the duplicate left its owner
+    _check(uni, ev, gm, out, times)
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# process transport: bit-identity across (partitioner x P x W x R)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn,P,W,R", [("mod_hash", 4, 2, 2),
+                                      ("mod_hash", 5, 3, 2),
+                                      ("word_cyclic", 6, 3, 3)])
+def test_proc_transport_bit_identical(fn, P, W, R):
+    uni, ev, gm = _gm(51, P, fn)
+    times = _times(ev, 51)
+    with ShardedRetriever(gm, W, transport="proc", replicas=R,
+                          hedge_delay_s=0.05) as sr:
+        out = sr.retrieve(times, parse_attr_options(ATTRS, uni))
+        assert sr.last_stats["transport"] == "proc"
+        assert sr.last_stats["replicas"] == R
+    _check(uni, ev, gm, out, times)
+    gm.close()
+
+
+def test_proc_enable_sharding_env_wiring(monkeypatch):
+    """``REPRO_SHARD_TRANSPORT=proc`` / ``REPRO_REPLICAS`` select the
+    process transport through ``GraphManager.enable_sharding`` with no
+    code changes at the call site — the CI differential hook."""
+    monkeypatch.setenv("REPRO_SHARD_TRANSPORT", "proc")
+    monkeypatch.setenv("REPRO_REPLICAS", "2")
+    uni, ev, gm = _gm(52, 4)
+    times = _times(ev, 52, 3)
+    gm.enable_sharding(2)
+    assert isinstance(gm.sharded.transport, ProcTransport)
+    assert gm.sharded.replicas == 2
+    out = gm.get_snapshots(times)
+    for t in times:
+        truth = replay(uni, ev, t)
+        assert np.array_equal(out[t].node_mask, truth.node_mask)
+        assert np.array_equal(out[t].edge_mask, truth.edge_mask)
+    gm.disable_sharding()
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos: SIGKILL a replica
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sigkill_mid_query_fails_over_to_replica():
+    uni, ev, gm = _gm(61, 6, n=120)
+    times = _times(ev, 61)
+    # max_hedges=0: the recovery must go through the requeue/failover path
+    # (a hedge racing ahead would also succeed, but nondeterministically)
+    with ShardedRetriever(gm, 2, transport="proc", replicas=2,
+                          task_retries=2, io_retries=2, max_hedges=0,
+                          hedge_delay_s=0.0) as sr:
+        victim = next(iter(sr.assignment(gm.dg.P)))
+        # every fetch on the victim stalls, so the query is guaranteed to
+        # be in-flight against it when the SIGKILL lands
+        sr.transport.inject_delay(victim, ms=400.0, count=-1)
+        killer = threading.Timer(0.1,
+                                 lambda: sr.transport.kill(victim))
+        killer.start()
+        try:
+            out = sr.retrieve(times, parse_attr_options(ATTRS, uni))
+        finally:
+            killer.join()
+        assert victim not in sr.alive_workers()
+        assert sr.failovers_total >= 1
+    _check(uni, ev, gm, out, times)
+    gm.close()
+
+
+@pytest.mark.slow
+def test_sigkill_at_idle_is_excluded_by_heartbeat():
+    uni, ev, gm = _gm(62, 6, n=120)
+    times = _times(ev, 62)
+    with ShardedRetriever(gm, 2, transport="proc", replicas=2,
+                          hedge_delay_s=0.05) as sr:
+        out1 = sr.retrieve(times, parse_attr_options(ATTRS, uni))
+        _check(uni, ev, gm, out1, times)
+        victim = next(iter(sr.assignment(gm.dg.P)))
+        sr.transport.kill(victim)
+        # the heartbeat-RPC probe at query entry detects the corpse
+        sr.probe_health(force=True)
+        assert victim not in sr.alive_workers()
+        r0 = sr.requeues_total
+        out2 = sr.retrieve(times, parse_attr_options(ATTRS, uni))
+        # excluded *before* routing: no fetch ever hit the dead server
+        assert sr.requeues_total == r0
+        assert victim not in sr.assignment(gm.dg.P)
+    _check(uni, ev, gm, out2, times)
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# epoch publish invalidates shard-local caches under live ingest
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_epoch_publish_invalidates_shard_caches():
+    uni, ev = random_history(160, 71)
+    cut = len(ev) - 40
+    gm = GraphManager(uni, ev[:cut], L=16, k=2, cache_bytes=0,
+                      prefetch_workers=0, num_partitions=4,
+                      partition_fn="mod_hash")
+    with ShardedRetriever(gm, 2, transport="proc", replicas=2,
+                          hedge_delay_s=0.05) as sr:
+        tr = sr.transport
+        t_old = int(ev.time[cut - 1])
+        out1 = sr.retrieve([t_old])
+        truth_old = replay(uni, ev[:cut], t_old)
+        assert np.array_equal(out1[t_old].node_mask, truth_old.node_mask)
+        # shard caches are warm now; snapshot their invalidation counters
+        # (pooled daemons carry counters across owners, so compare deltas)
+        before = {s: tr.server_stats(s) for s in tr.servers()}
+        assert any(st["hot_bytes_used"] > 0 or st["keys"] > 0
+                   for st in before.values())
+
+        gm.update(ev[cut:])                  # commits + publishes an epoch
+
+        after = {s: tr.server_stats(s) for s in tr.servers()}
+        for s in tr.servers():
+            assert (after[s]["invalidations"]
+                    > before[s]["invalidations"]), \
+                f"{s} missed the epoch announcement"
+            assert after[s]["epoch"] > before[s]["epoch"]
+        # post-publish reads are served fresh — bit-identical to a replay
+        # of the *full* history, including at the old (overwritten) time
+        times = sorted({t_old, int(ev.time[-1])})
+        out2 = sr.retrieve(times)
+        for t in times:
+            truth = replay(uni, ev, t)
+            assert np.array_equal(out2[t].node_mask, truth.node_mask), t
+            assert np.array_equal(out2[t].edge_mask, truth.edge_mask), t
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite (b): worker-side exceptions carry the remote traceback
+# ---------------------------------------------------------------------------
+
+def test_unowned_fetch_is_fatal_with_remote_traceback():
+    uni, ev, gm = _gm(81, 4)
+    tr = ProcTransport(gm, 2, replicas=1)
+    try:
+        server = tr.servers()[0]
+        with pytest.raises(RemoteCallError) as ei:
+            tr.fetch(server, [(999, 0, "s")])
+        e = ei.value
+        assert e.retryable is False          # routing bug, not transient
+        assert e.remote_type == "ValueError"
+        assert "unowned partition" in str(e)
+        assert "h_fetch" in e.remote_traceback   # the *worker-side* frame
+    finally:
+        tr.close()
+        gm.close()
+
+
+@pytest.mark.slow
+def test_shard_execution_error_embeds_remote_traceback():
+    uni, ev, gm = _gm(82, 4)
+    times = _times(ev, 82, 3)
+    with ShardedRetriever(gm, 2, transport="proc", replicas=1,
+                          task_retries=0, max_hedges=0,
+                          hedge_delay_s=0.0) as sr:
+        tr = sr.transport
+        victim = next(iter(sr.assignment(gm.dg.P)))
+        # sabotage: the victim now owns nothing, so fetches routed to it
+        # raise the (fatal) unowned-partition error inside the process
+        tr._by_name[victim].client.call("configure", {
+            "origin_host": tr.origin.host, "origin_port": tr.origin.port,
+            "owned": [], "epoch": 0})
+        with pytest.raises(ShardExecutionError) as ei:
+            sr.retrieve(times)
+        assert "remote traceback" in str(ei.value)
+        assert "unowned partition" in str(ei.value)
+        assert isinstance(ei.value.__cause__, RemoteCallError)
+    gm.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite (e) support: no process/fd leaks past close()
+# ---------------------------------------------------------------------------
+
+def test_close_reaps_processes_when_pooling_disabled(monkeypatch):
+    import os
+    monkeypatch.setenv("REPRO_SHARDD_POOL", "0")
+    uni, ev, gm = _gm(91, 4)
+    tr = ProcTransport(gm, 2, replicas=2)
+    handles = list(tr._by_name.values())
+    pids = [h.pid for h in handles]
+    assert all(h.alive() for h in handles)
+    tr.close()
+    for h, pid in zip(handles, pids):
+        assert h.proc.poll() is not None, pid   # exited and reaped
+    gm.close()

@@ -1,0 +1,274 @@
+"""RPC transport layer: framing, deadlines, connection pooling, and the
+typed error taxonomy the fault layer keys on.
+
+The load-bearing properties:
+
+* frames round-trip bit-exactly, including the ``None``-blob sentinel
+  (a *missing* KV value is distinct from an empty one);
+* every failure is classified — :class:`RpcConnectionError` /
+  :class:`RpcTimeout` are retryable (another attempt can win),
+  :class:`RpcProtocolError` is fatal (a codec bug re-fails), and
+  :class:`RemoteCallError` inherits the server's classification of the
+  handler exception;
+* a remote handler failure carries the *server-side* traceback through
+  the boundary, so ``str(e)`` shows where the worker actually failed.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.runtime.fault import default_retryable, retry
+from repro.runtime.rpc import (KIND_ERROR, KIND_REQUEST, KIND_RESPONSE,
+                               RemoteCallError, RpcClient,
+                               RpcConnectionError, RpcProtocolError,
+                               RpcServer, RpcTimeout, pack_frame, read_frame)
+
+
+def _loop_pair():
+    """A connected (client, server) socket pair over loopback."""
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    c = socket.create_connection(lst.getsockname())
+    s, _ = lst.accept()
+    lst.close()
+    return c, s
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_with_none_sentinel():
+    blobs = [b"hello", None, b"", b"\x00" * 257, None]
+    frame = pack_frame(KIND_RESPONSE, 42,
+                       {"r": {"n": 3}, "extra": "é"}, blobs)
+    c, s = _loop_pair()
+    try:
+        c.sendall(frame)
+        kind, rid, header, out = read_frame(s)
+        assert kind == KIND_RESPONSE
+        assert rid == 42
+        assert header == {"r": {"n": 3}, "extra": "é"}
+        assert out == blobs               # None != b"" — holes survive
+        assert out[2] == b"" and out[1] is None
+    finally:
+        c.close()
+        s.close()
+
+
+@pytest.mark.parametrize("raw", [
+    struct.pack("<I", 5),                              # length < minimum
+    struct.pack("<I", (1 << 30) + 1),                  # length > MAX_FRAME
+    struct.pack("<I", 13) + struct.pack("<BQI", 7, 1, 0),   # bad kind
+    struct.pack("<I", 13) + struct.pack("<BQI", 0, 1, 999),  # header overrun
+])
+def test_corrupt_frames_are_protocol_errors(raw):
+    c, s = _loop_pair()
+    try:
+        c.sendall(raw)
+        with pytest.raises(RpcProtocolError) as ei:
+            read_frame(s)
+        assert ei.value.retryable is False
+    finally:
+        c.close()
+        s.close()
+
+
+def test_midframe_eof_is_retryable_connection_error():
+    c, s = _loop_pair()
+    try:
+        c.sendall(struct.pack("<I", 100) + b"partial")
+        c.close()
+        with pytest.raises(RpcConnectionError) as ei:
+            read_frame(s)
+        assert ei.value.retryable is True
+    finally:
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# client <-> server calls
+# ---------------------------------------------------------------------------
+
+def _echo_handlers():
+    def h_echo(args, blobs):
+        return {"args": args, "n": len(blobs)}, list(blobs)
+
+    def h_boom_io(args, blobs):
+        raise IOError("disk hiccup")
+
+    def h_boom_val(args, blobs):
+        raise ValueError("bad argument shape")
+
+    def h_slow(args, blobs):
+        time.sleep(float(args.get("s", 1.0)))
+        return "late"
+
+    return {"echo": h_echo, "boom_io": h_boom_io,
+            "boom_val": h_boom_val, "slow": h_slow}
+
+
+def test_call_roundtrip_and_pool_reuse():
+    with RpcServer(_echo_handlers()) as srv:
+        cli = RpcClient(srv.host, srv.port)
+        try:
+            for i in range(5):
+                res, blobs = cli.call("echo", {"i": i},
+                                      blobs=[b"x" * i, None])
+                assert res == {"args": {"i": i}, "n": 2}
+                assert blobs == [b"x" * i, None]
+            # sequential calls reuse one pooled connection
+            assert cli.dials == 1
+            assert cli.calls == 5
+            assert srv.requests == 5 and srv.errors == 0
+        finally:
+            cli.close()
+
+
+def test_concurrent_calls_use_distinct_connections():
+    with RpcServer(_echo_handlers()) as srv:
+        cli = RpcClient(srv.host, srv.port, pool_size=8)
+        out: dict[int, dict] = {}
+
+        def one(i: int) -> None:
+            res, _ = cli.call("slow" if i % 3 == 0 else "echo",
+                              {"i": i, "s": 0.05})
+            out[i] = res
+
+        try:
+            ts = [threading.Thread(target=one, args=(i,)) for i in range(9)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            assert len(out) == 9
+            for i in range(9):
+                if i % 3 == 0:
+                    assert out[i] == "late"
+                else:
+                    assert out[i]["args"]["i"] == i
+            assert cli.dials >= 2          # concurrency forced extra dials
+        finally:
+            cli.close()
+
+
+def test_remote_error_carries_traceback_and_classification():
+    with RpcServer(_echo_handlers()) as srv:
+        cli = RpcClient(srv.host, srv.port)
+        try:
+            with pytest.raises(RemoteCallError) as ei:
+                cli.call("boom_val", {})
+            e = ei.value
+            assert e.retryable is False            # ValueError: fatal
+            assert e.remote_type == "ValueError"
+            assert "bad argument shape" in str(e)
+            assert "--- remote traceback ---" in str(e)
+            assert "h_boom_val" in e.remote_traceback   # server-side frame
+
+            with pytest.raises(RemoteCallError) as ei:
+                cli.call("boom_io", {})
+            assert ei.value.retryable is True      # IOError: transient
+            assert default_retryable(ei.value)
+
+            with pytest.raises(RemoteCallError) as ei:
+                cli.call("no_such_method", {})
+            assert ei.value.retryable is False
+            assert ei.value.remote_type == "KeyError"
+        finally:
+            cli.close()
+
+
+def test_remote_traceback_survives_fault_retry():
+    """fault.retry re-raises the exception *object*, so the remote frames
+    ride along in the message after retries are exhausted."""
+    with RpcServer(_echo_handlers()) as srv:
+        cli = RpcClient(srv.host, srv.port)
+        try:
+            with pytest.raises(RemoteCallError) as ei:
+                retry(lambda: cli.call("boom_io", {}), attempts=2,
+                      base_delay=0.001, retryable=default_retryable)
+            assert "h_boom_io" in str(ei.value)
+            assert srv.errors >= 2                 # it really retried
+        finally:
+            cli.close()
+
+
+def test_deadline_timeout_is_retryable():
+    with RpcServer(_echo_handlers()) as srv:
+        cli = RpcClient(srv.host, srv.port)
+        try:
+            t0 = time.monotonic()
+            with pytest.raises(RpcTimeout) as ei:
+                cli.call("slow", {"s": 5.0}, deadline_s=0.2)
+            assert time.monotonic() - t0 < 2.0     # deadline, not handler
+            assert ei.value.retryable is True
+            assert default_retryable(ei.value)
+            # the poisoned socket was discarded: the next call re-dials
+            # a clean connection and succeeds
+            res, _ = cli.call("echo", {"ok": 1})
+            assert res["args"] == {"ok": 1}
+            assert cli.dials >= 2
+        finally:
+            cli.close()
+
+
+def test_dial_failure_is_retryable_connection_error():
+    # grab a port nothing listens on
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    cli = RpcClient("127.0.0.1", port, connect_timeout=0.5)
+    try:
+        with pytest.raises(RpcConnectionError) as ei:
+            cli.call("echo", {})
+        assert ei.value.retryable is True
+    finally:
+        cli.close()
+
+
+def test_response_id_mismatch_is_fatal():
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+
+    def bad_server():
+        conn, _ = lst.accept()
+        read_frame(conn)
+        conn.sendall(pack_frame(KIND_RESPONSE, 999_999, {"r": "wrong"}))
+        conn.close()
+
+    t = threading.Thread(target=bad_server, daemon=True)
+    t.start()
+    cli = RpcClient(*lst.getsockname())
+    try:
+        with pytest.raises(RpcProtocolError) as ei:
+            cli.call("echo", {})
+        assert ei.value.retryable is False
+    finally:
+        cli.close()
+        lst.close()
+        t.join(timeout=2.0)
+
+
+def test_server_close_is_idempotent_and_frees_port():
+    srv = RpcServer(_echo_handlers()).start()
+    port = srv.port
+    srv.close()
+    srv.close()
+    # port is reusable immediately (SO_REUSEADDR + real close)
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", port))
+    s.close()
+
+
+def test_request_kind_constant_sanity():
+    # the wire protocol is frozen: these values are part of the format
+    assert (KIND_REQUEST, KIND_RESPONSE, KIND_ERROR) == (0, 1, 2)
