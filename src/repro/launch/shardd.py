@@ -51,6 +51,12 @@ from ..storage.kv import KVStore, TieredKV
 
 READY_PREFIX = "SHARDD_READY"
 
+# h_fetch's unowned-partition rejection message prefix — the transport
+# matches it (through RemoteCallError.remote_message) to tell a
+# routing-config gap apart from a liveness failure, widen the server's
+# owned set via ``set_owned`` and retry instead of blacklisting it
+UNOWNED_MSG = "fetch for unowned partition(s)"
+
 
 def _decode_keys(raw: list) -> list[tuple]:
     return [(int(p), int(d), str(c)) for p, d, c in raw]
@@ -163,9 +169,10 @@ class ShardServer:
             bad = [k for k in keys if k[0] not in owned]
             if bad:
                 # fatal by classification: a fetch for an unowned
-                # partition is a routing bug, not a transient fault
+                # partition is a routing-config gap, not a transient
+                # fault — the transport reacts with set_owned + retry
                 raise ValueError(
-                    f"fetch for unowned partition(s) {sorted({k[0] for k in bad})}; "
+                    f"{UNOWNED_MSG} {sorted({k[0] for k in bad})}; "
                     f"this shard owns {sorted(owned)}")
         min_epoch = int(args.get("min_epoch", 0))
         with self._lock:
@@ -183,6 +190,18 @@ class ShardServer:
             self.counters["bytes_out"] += sum(
                 len(b) for b in out if b is not None)
         return None, out
+
+    def h_set_owned(self, args: dict, blobs) -> dict:
+        """Replace the owned partition set *without* touching the cache
+        or origin — the coordinator's failover path when >1 server has
+        died and routing must land a partition beyond the rendezvous
+        ranks this server was originally configured with."""
+        owned = args.get("owned")
+        with self._lock:
+            self.owned = None if owned is None else frozenset(
+                int(p) for p in owned)
+            out = None if self.owned is None else sorted(self.owned)
+        return {"owned": out}
 
     def h_announce(self, args: dict, blobs) -> dict:
         epoch = int(args.get("epoch", 0))
@@ -227,6 +246,7 @@ class ShardServer:
 
     def handlers(self) -> dict:
         return {"configure": self.h_configure, "fetch": self.h_fetch,
+                "set_owned": self.h_set_owned,
                 "announce": self.h_announce, "health": self.h_health,
                 "stats": self.h_stats, "set_delay": self.h_set_delay,
                 "flush_cache": self.h_flush_cache, "ping": self.h_ping}
@@ -381,10 +401,16 @@ def acquire_shard_procs(n: int, *, hot_mb: float = 64.0) -> list[ShardProc]:
         with _POOL_LOCK:
             while _POOL and len(out) < n:
                 out.append(_POOL.pop())
-        dead, out = [h for h in out if not h.alive()], \
-                    [h for h in out if h.alive()]
-        for h in dead:
-            h.terminate()
+        # one alive() (an RPC ping) per handle: evaluating it twice can
+        # double-count a handle whose state flips between calls — or
+        # drop it entirely, leaking the Popen and its pipes
+        live: list[ShardProc] = []
+        for h in out:
+            if h.alive():
+                live.append(h)
+            else:
+                h.terminate()
+        out = live
     if len(out) < n:
         out.extend(spawn_shard_procs(n - len(out), hot_mb=hot_mb))
     return out

@@ -250,22 +250,26 @@ class RpcClient:
                 raise RpcConnectionError(f"{method}: {e}") from e
             self._arm(sock, deadline)
             kind, rid, rhead, rblobs = read_frame(sock)
+            # validate BEFORE pooling: an id/kind anomaly means the
+            # stream is desynchronized — checking it in would hand the
+            # stray frame to whichever call borrows the socket next
+            if rid != req_id:
+                raise RpcProtocolError(
+                    f"{method}: response id {rid} != request id {req_id}")
+            if kind not in (KIND_RESPONSE, KIND_ERROR):
+                raise RpcProtocolError(
+                    f"{method}: unexpected frame kind {kind}")
         except BaseException:
             sock.close()
             raise
         self._checkin(sock)
         with self._lock:
             self.calls += 1
-        if rid != req_id:
-            raise RpcProtocolError(
-                f"{method}: response id {rid} != request id {req_id}")
         if kind == KIND_ERROR:
             raise RemoteCallError(
                 method, rhead.get("type", "Exception"),
                 rhead.get("msg", ""), rhead.get("tb", ""),
                 retryable=bool(rhead.get("retryable", False)))
-        if kind != KIND_RESPONSE:
-            raise RpcProtocolError(f"{method}: unexpected frame kind {kind}")
         return rhead.get("r"), rblobs
 
     @staticmethod

@@ -141,6 +141,13 @@ class ProcTransport(ShardTransport):
     reconfigure), and subscribes to the manager's
     :class:`~repro.core.epoch.EpochRegistry` so every publish fans an
     ``announce`` out to the shard-local caches.
+
+    Deeper failures (>1 server down) can route a partition beyond a
+    survivor's configured ranks; its shardd rejects the fetch as a
+    routing-config error (``UNOWNED_MSG``), and :meth:`fetch` reacts by
+    widening that server's owned set (``set_owned`` RPC — cache kept)
+    and retrying, so the origin's data stays reachable as long as any
+    server is — ownership rejections never read as liveness failures.
     """
 
     name = "proc"
@@ -172,6 +179,8 @@ class ProcTransport(ShardTransport):
                 "hot_bytes": int(float(hot_mb) * 2**20),
                 "epoch": epoch0,
             })
+        self._owned = {n: set(ps) for n, ps in owned.items()}
+        self._owned_lock = threading.Lock()
         self._sub = None
         if self._epochs is not None:
             self._sub = lambda eid, data: self.announce(eid)
@@ -182,11 +191,37 @@ class ProcTransport(ShardTransport):
 
     def fetch(self, server: str, keys: list, *, min_epoch: int = 0,
               deadline_s: float | None = None) -> list:
-        from ..launch.shardd import _encode_keys
+        from ..launch.shardd import UNOWNED_MSG, _encode_keys
+        from .rpc import RemoteCallError
+
+        def unowned(err: BaseException) -> bool:
+            return (isinstance(err, RemoteCallError)
+                    and err.remote_type == "ValueError"
+                    and UNOWNED_MSG in err.remote_message)
+
         h = self._by_name[server]
-        _, blobs = h.client.call(
-            "fetch", {"k": _encode_keys(keys), "min_epoch": int(min_epoch)},
-            deadline_s=deadline_s)
+        args = {"k": _encode_keys(keys), "min_epoch": int(min_epoch)}
+        try:
+            _, blobs = h.client.call("fetch", args, deadline_s=deadline_s)
+        except RemoteCallError as e:
+            if not unowned(e):
+                raise
+            # failover routed a partition beyond the server's configured
+            # rendezvous ranks (>1 failure): a routing-config gap, not a
+            # liveness failure — widen ownership (cache kept) and retry
+            with self._owned_lock:
+                owned = self._owned.setdefault(server, set())
+                owned.update(k[0] for k in keys)
+                widened = sorted(owned)
+            try:
+                h.client.call("set_owned", {"owned": widened},
+                              deadline_s=5.0)
+                _, blobs = h.client.call("fetch", args,
+                                         deadline_s=deadline_s)
+            except RemoteCallError as e2:
+                if unowned(e2):     # still rejected: config bug, but the
+                    e2.routing_error = True   # server is provably alive
+                raise
         return blobs
 
     def health(self, server: str) -> dict:
@@ -513,8 +548,31 @@ class ShardedRetriever:
                         if task.key in sm.done:   # primary won meanwhile
                             continue
                         tried = frozenset(used.get(task.key, ()))
+                # inner retries re-plan: each failed attempt adds the
+                # server whose fetch failed to an attempt-local tried
+                # set, so the next retry routes to a distinct replica
+                # (when one exists) instead of hammering the same
+                # unreachable server through the backoff schedule
+                attempt_tried = set(tried)
+
+                def attempt(key=task.key):
+                    try:
+                        return run_one(key, frozenset(attempt_tried))
+                    except Exception as e:
+                        failed = getattr(e, "failed_server", None)
+                        if (failed is not None
+                                and not getattr(e, "routing_error", False)):
+                            attempt_tried.add(failed)
+                            # and mark it dead right away so *other*
+                            # tasks and lazily-routed keys also avoid
+                            # the corpse; a transient blip is
+                            # resurrected by the next health probe or
+                            # by completing a later attempt
+                            self.heartbeats.mark_dead(failed)
+                        raise
+
                 try:
-                    res, served = retry(lambda: run_one(task.key, tried),
+                    res, served = retry(attempt,
                                         attempts=self.io_retries,
                                         retryable=default_retryable)
                 except Exception as e:
@@ -523,8 +581,11 @@ class ShardedRetriever:
                         fails[task.key] = fails.get(task.key, 0) + 1
                         # the server whose fetch failed reads as dead
                         # until it completes something again: later
-                        # attempts and the next query route around it
-                        self.heartbeats.mark_dead(failed)
+                        # attempts and the next query route around it —
+                        # unless it rejected for ownership/routing
+                        # reasons, which proves it alive
+                        if not getattr(e, "routing_error", False):
+                            self.heartbeats.mark_dead(failed)
                         if (fails[task.key] <= self.task_retries
                                 and sm.fail(task.key)):
                             requeues[0] += 1

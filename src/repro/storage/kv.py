@@ -563,6 +563,12 @@ class TieredKV(KVStore):
         # tombstone version stays so the reader cannot admit stale bytes
         self._ver: dict[Key, int] = {}
         self._inflight: dict[Key, int] = {}
+        # whole-cache generation, bumped by invalidate_hot(): per-key
+        # versions only move on local put/delete, so a read-only replica
+        # (shardd: writes happen at the origin) needs this to fence cold
+        # reads that straddle an epoch invalidation — bytes fetched
+        # before the bump must not be admitted after it
+        self._gen = 0
         self._lock = threading.Lock()
         # writes hold this across the cold put/delete *and* the version
         # bump + admission, so cold-tier order == admission order — two
@@ -607,6 +613,7 @@ class TieredKV(KVStore):
         while True:
             with self._lock:
                 ver = self._ver.get(key, 0)
+                gen = self._gen
                 self._inflight[key] = self._inflight.get(key, 0) + 1
             try:
                 v = self.cold.get(key)        # may raise KeyError
@@ -617,7 +624,12 @@ class TieredKV(KVStore):
             with self._lock:
                 self._dec_inflight(key)
                 if self._ver.get(key, 0) == ver:
-                    self._admit(key, v)
+                    if self._gen == gen:
+                        self._admit(key, v)
+                    # an invalidation landed mid-read: the bytes are fine
+                    # for *this* caller (its epoch pin predates the
+                    # publish) but must not enter the hot tier, where a
+                    # newer-epoch reader would trust them
                     break
                 newer = self._hot.get(key)
                 if newer is not None:         # the racing put admitted it
@@ -654,6 +666,7 @@ class TieredKV(KVStore):
         miss_keys = [keys[i] for i in miss_idx]
         with self._lock:
             vers = [self._ver.get(k, 0) for k in miss_keys]
+            gen = self._gen
             for k in miss_keys:
                 self._inflight[k] = self._inflight.get(k, 0) + 1
         try:
@@ -671,7 +684,8 @@ class TieredKV(KVStore):
                 if v is None:
                     continue                  # absent in cold: stays None
                 if self._ver.get(k, 0) == ver:
-                    self._admit(k, v)
+                    if self._gen == gen:      # see get(): no admission
+                        self._admit(k, v)     # across an invalidation
                     out[i] = v
                 elif self._hot.get(k) is not None:
                     self._hot.move_to_end(k)
@@ -694,11 +708,15 @@ class TieredKV(KVStore):
         process: the coordinator announced a new index version, so any
         cached blob may have been superseded at the origin).  Returns the
         number of entries dropped; subsequent gets read through to the
-        cold tier."""
+        cold tier.  Also bumps the cache generation so a cold read that
+        started *before* this call cannot admit its (possibly
+        pre-publish) bytes after it — per-key versions never move in a
+        read-only replica, so they alone cannot fence this race."""
         with self._lock:
             n = len(self._hot)
             self._hot.clear()
             self._hot_size = 0
+            self._gen += 1
         return n
 
     def put(self, key: Key, value: bytes) -> None:

@@ -26,7 +26,7 @@ from repro.core.query import parse_attr_options
 from repro.data.generators import random_history
 from repro.runtime.fault import elastic_replan, rendezvous_rank
 from repro.runtime.replica import ReplicaManager
-from repro.runtime.rpc import RemoteCallError
+from repro.runtime.rpc import RemoteCallError, RpcConnectionError
 from repro.runtime.shard import (InThreadTransport, ProcTransport,
                                  ShardedRetriever, ShardExecutionError)
 
@@ -171,6 +171,43 @@ def test_hedge_routes_to_distinct_replica():
     gm.close()
 
 
+class UnreachableServerTransport(InThreadTransport):
+    """In-thread transport where one server's fetches always fail with a
+    retryable connection error — the unreachable-replica model."""
+
+    def __init__(self, gm, servers, dead: str) -> None:
+        super().__init__(gm, servers)
+        self.dead = dead
+        self.dead_hits = 0
+
+    def fetch(self, server, keys, *, min_epoch=0, deadline_s=None):
+        if server == self.dead:
+            with self._lock:
+                self.dead_hits += 1
+            raise RpcConnectionError(f"injected: {server} unreachable")
+        return super().fetch(server, keys, min_epoch=min_epoch,
+                             deadline_s=deadline_s)
+
+
+def test_inner_retry_fails_over_to_distinct_replica():
+    """``fault.retry``'s inner attempts re-plan around the server whose
+    fetch failed (attempt-local tried set): with ``task_retries=0`` the
+    *only* path to success is an inner retry routed to the other replica.
+    Previously every inner attempt re-planned the identical route and
+    hammered the same unreachable server through the backoff schedule."""
+    uni, ev, gm = _gm(42, 6)
+    times = _times(ev, 42)
+    tr = UnreachableServerTransport(gm, ["s0", "s1"], dead="s0")
+    with ShardedRetriever(gm, 2, transport=tr, replicas=2,
+                          task_retries=0, io_retries=2, max_hedges=0,
+                          hedge_delay_s=0.0) as sr:
+        out = sr.retrieve(times, parse_attr_options(ATTRS, uni))
+        assert tr.dead_hits == 1          # failed once, never hammered
+        assert sr.requeues_total == 0     # recovered inside the attempt
+    _check(uni, ev, gm, out, times)
+    gm.close()
+
+
 # ---------------------------------------------------------------------------
 # process transport: bit-identity across (partitioner x P x W x R)
 # ---------------------------------------------------------------------------
@@ -309,15 +346,20 @@ def test_epoch_publish_invalidates_shard_caches():
 # satellite (b): worker-side exceptions carry the remote traceback
 # ---------------------------------------------------------------------------
 
-def test_unowned_fetch_is_fatal_with_remote_traceback():
+def test_unowned_fetch_rejection_carries_remote_traceback():
+    """At the raw RPC level an unowned fetch is a fatal rejection whose
+    error frame carries the worker-side traceback (the transport layers
+    its widen-and-retry recovery on top of exactly this signal)."""
+    from repro.launch.shardd import _encode_keys
     uni, ev, gm = _gm(81, 4)
     tr = ProcTransport(gm, 2, replicas=1)
     try:
-        server = tr.servers()[0]
+        h = tr._by_name[tr.servers()[0]]
         with pytest.raises(RemoteCallError) as ei:
-            tr.fetch(server, [(999, 0, "s")])
+            h.client.call("fetch", {"k": _encode_keys([(999, 0, "s")]),
+                                    "min_epoch": 0})
         e = ei.value
-        assert e.retryable is False          # routing bug, not transient
+        assert e.retryable is False          # routing gap, not transient
         assert e.remote_type == "ValueError"
         assert "unowned partition" in str(e)
         assert "h_fetch" in e.remote_traceback   # the *worker-side* frame
@@ -326,24 +368,55 @@ def test_unowned_fetch_is_fatal_with_remote_traceback():
         gm.close()
 
 
+def test_unowned_fetch_widens_ownership_and_recovers():
+    """A fetch routed beyond a server's configured rendezvous ranks (the
+    >1-failure scenario) must not read as a dead server: the transport
+    widens the shardd's owned set via ``set_owned`` (cache kept) and
+    retries, so the healthy server serves the partition from then on."""
+    uni, ev, gm = _gm(83, 6)
+    tr = ProcTransport(gm, 3, replicas=1)    # depth 2 of 3: one outsider/p
+    try:
+        key = next(iter(gm.store.keys()))
+        p = key[0]
+        outsider = next(s for s in tr.servers() if p not in tr._owned[s])
+        want = gm.store.get(key)
+        assert tr.fetch(outsider, [key]) == [want]
+        assert p in tr._owned[outsider]      # widened, not blacklisted
+        # and again, without tripping the rejection path a second time
+        assert tr.fetch(outsider, [key]) == [want]
+        # a fetch for a partition absent from the store recovers the same
+        # way and reports the hole as None (mget_optional protocol)
+        assert tr.fetch(outsider, [(999, 0, "s")]) == [None]
+    finally:
+        tr.close()
+        gm.close()
+
+
 @pytest.mark.slow
 def test_shard_execution_error_embeds_remote_traceback():
+    import socket
     uni, ev, gm = _gm(82, 4)
     times = _times(ev, 82, 3)
+    # a port that refuses connections: bind one, note it, close it
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    dead_port = s.getsockname()[1]
+    s.close()
     with ShardedRetriever(gm, 2, transport="proc", replicas=1,
-                          task_retries=0, max_hedges=0,
+                          task_retries=0, io_retries=2, max_hedges=0,
                           hedge_delay_s=0.0) as sr:
         tr = sr.transport
-        victim = next(iter(sr.assignment(gm.dg.P)))
-        # sabotage: the victim now owns nothing, so fetches routed to it
-        # raise the (fatal) unowned-partition error inside the process
-        tr._by_name[victim].client.call("configure", {
-            "origin_host": tr.origin.host, "origin_port": tr.origin.port,
-            "owned": [], "epoch": 0})
+        # sabotage: every server's origin points at a closed port, so
+        # every fetch fails *inside a worker process* with a connection
+        # error and no replica can recover the query
+        for h in tr._by_name.values():
+            h.client.call("configure", {
+                "origin_host": "127.0.0.1", "origin_port": dead_port,
+                "owned": None, "epoch": 0})
         with pytest.raises(ShardExecutionError) as ei:
             sr.retrieve(times)
         assert "remote traceback" in str(ei.value)
-        assert "unowned partition" in str(ei.value)
+        assert "h_fetch" in str(ei.value)    # the worker-side frame
         assert isinstance(ei.value.__cause__, RemoteCallError)
     gm.close()
 

@@ -251,6 +251,9 @@ def test_response_id_mismatch_is_fatal():
         with pytest.raises(RpcProtocolError) as ei:
             cli.call("echo", {})
         assert ei.value.retryable is False
+        # the desynchronized socket was closed, not pooled: a stray frame
+        # must never be handed to whichever call borrows the socket next
+        assert cli._idle == []
     finally:
         cli.close()
         lst.close()

@@ -320,3 +320,54 @@ def test_tiered_kv_resize_hot(tmp_path):
     assert kv.hot_bytes_used() == 1000
     kv.resize_hot(350)
     assert kv.hot_bytes_used() <= 350
+
+
+def test_tiered_kv_invalidate_fences_inflight_cold_reads():
+    """A cold read that straddles ``invalidate_hot()`` must not admit its
+    (possibly pre-publish) bytes.  This is the shardd scenario: the cache
+    is read-only (writes happen at the origin), so per-key versions never
+    move and only the generation fence keeps a blob fetched *before* an
+    epoch invalidation from re-entering the hot tier *after* it — where a
+    newer-epoch reader would trust it."""
+    from repro.storage.kv import TieredKV
+    cold = MemKV()
+    key = (0, 1, "a")
+    cold.put(key, b"old")
+    kv = TieredKV(cold, hot_bytes=1 << 20, max_item_frac=1.0)
+
+    orig_mget = cold.mget
+
+    def racy_mget(keys):
+        out = orig_mget(keys)        # reads the pre-publish bytes
+        cold.put(key, b"new")        # origin overwritten by the commit
+        kv.invalidate_hot()          # announce lands before admission
+        return out
+
+    cold.mget = racy_mget
+    try:
+        # the in-flight reader still gets the old bytes (its epoch pin
+        # predates the publish) ...
+        assert kv.mget([key]) == [b"old"]
+    finally:
+        cold.mget = orig_mget
+    # ... but they were never admitted, so a post-publish reader reads
+    # through to the fresh origin bytes
+    assert kv.hot_bytes_used() == 0
+    assert kv.get(key) == b"new"
+
+    kv.invalidate_hot()              # clear before testing the get() path
+    orig_get = cold.get
+
+    def racy_get(k):
+        v = orig_get(k)
+        cold.put(key, b"newer")
+        kv.invalidate_hot()
+        return v
+
+    cold.get = racy_get
+    try:
+        assert kv.get(key) == b"new"
+    finally:
+        cold.get = orig_get
+    assert kv.hot_bytes_used() == 0
+    assert kv.get(key) == b"newer"
